@@ -1,0 +1,98 @@
+"""Paper Fig. 18 + Fig. 3 analogues.
+
+Fig. 18: cost-model prediction accuracy. The paper profiles on A100 and
+predicts iteration time/memory; here the ProfiledCostModel is built from
+power-of-two CPU measurements of a *real* reduced model's jitted step, then
+validated on off-grid (mbs, seq) points against fresh measurements — the
+same interpolation machinery the planner uses on device.
+
+Fig. 3: single-layer computation time vs sequence length (super-linear
+growth from attention) — measured on the reduced model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_arch, reduced
+from repro.core.cost_model import ProfiledCostModel
+from repro.models import model as MD
+
+
+def _step_fns(cfg):
+    @jax.jit
+    def fwd(p, batch):
+        return MD.loss_fn(p, batch, cfg)[0]
+
+    @jax.jit
+    def bwd(p, batch):
+        return jax.grad(lambda p_: MD.loss_fn(p_, batch, cfg)[0])(p)
+    return fwd, bwd
+
+
+def _batch(cfg, m, s, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "tokens": jax.random.randint(k1, (m, s), 0, cfg.vocab),
+        "labels": jax.random.randint(k2, (m, s), 0, cfg.vocab),
+        "loss_weights": jnp.ones((m, s), jnp.float32),
+        "positions": jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (m, s)),
+        "segment_ids": jnp.zeros((m, s), jnp.int32),
+    }
+
+
+def _measure(cfg, params, fwd, bwd, m, s, key):
+    b = _batch(cfg, m, s, key)
+    fwd(params, b).block_until_ready()       # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        fwd(params, b).block_until_ready()
+    tf = (time.perf_counter() - t0) / 3
+    jax.block_until_ready(bwd(params, b))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(bwd(params, b))
+    tb = (time.perf_counter() - t0) / 3
+    mem = 2.0 * m * s * cfg.d_model * cfg.n_layers * 2
+    return tf, tb, mem
+
+
+def main():
+    cfg = dataclasses.replace(reduced(get_arch("gpt-paper")), n_layers=2)
+    key = jax.random.PRNGKey(0)
+    params = MD.init_params(key, cfg)
+    fwd, bwd = _step_fns(cfg)
+
+    # Fig. 3: per-layer time vs seq len (super-linear growth)
+    per_tok = []
+    for s in (64, 128, 256, 512):
+        tf, tb, _ = _measure(cfg, params, fwd, bwd, 2, s, key)
+        per_tok.append((s, (tf + tb) / (2 * s)))
+        emit(f"fig3_layer_time_seq{s}", (tf + tb) * 1e6 / cfg.n_layers,
+             f"us_per_token={1e6*(tf+tb)/(2*s):.3f}")
+    growth = per_tok[-1][1] / per_tok[0][1]
+    emit("fig3_supralinearity", 0.0,
+         f"per_token_time_ratio_512_vs_64={growth:.2f}")
+
+    # Fig. 18: profile grid -> predict off-grid -> relative error
+    pm = ProfiledCostModel.profile(
+        lambda m, s: _measure(cfg, params, fwd, bwd, m, s, key),
+        mbs_grid=(1, 2, 4, 8), seq_grid=(32, 64, 128, 256))
+    errs = []
+    for m, s in ((3, 96), (6, 192), (2, 48), (5, 160)):
+        tf, tb, _ = _measure(cfg, params, fwd, bwd, m, s, key)
+        pred = pm.stage_fwd_time(m, s) + pm.stage_bwd_time(m, s)
+        real = tf + tb
+        errs.append(abs(pred - real) / real)
+        emit(f"fig18_predict_m{m}_s{s}", real * 1e6,
+             f"pred_us={pred*1e6:.1f};rel_err={errs[-1]:.3f}")
+    emit("fig18_mean_rel_err", 0.0, f"mean_rel_err={np.mean(errs):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 15: padding efficiency — packing vs dynamic micro-batching,
+GPT (decoder-only) and T5 (enc-dec, per-stream efficiency)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, flan_like_lengths
+from repro.configs.base import get_arch
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.microbatch import dp_split, order_samples, padding_efficiency, _as2d
+from repro.core.packing import pack_first_fit, packing_efficiency
+from repro.core.shapes import ShapePalette
+
+
+def main():
+    for arch, encdec in (("gpt-paper", False), ("t5-paper", True)):
+        cfg = get_arch(arch)
+        cost = AnalyticCostModel(cfg, n_stages=4)
+        for max_len in (512, 2048, 8192):
+            pal = ShapePalette.build(min_seq=128, max_seq=max_len, max_mbs=512)
+            lengths = flan_like_lengths(65536, max_len, seed=0, encdec=encdec)[0]
+            order = order_samples(lengths, "sort")
+            L = _as2d(lengths)[order]
+            mbs = dp_split(L, cost, 4, palette=pal)
+            eff_dyn = padding_efficiency(mbs, L)
+            rows = pack_first_fit(L, max_len)
+            eff_pack = packing_efficiency(rows)
+            emit(f"fig15_{arch}_seq{max_len}_dynapipe", 0.0,
+                 f"padding_eff={eff_dyn:.3f}")
+            emit(f"fig15_{arch}_seq{max_len}_packing", 0.0,
+                 f"padding_eff={eff_pack:.3f}")
+            if encdec:
+                # per-stream efficiency (paper: packing's decoder stream is
+                # much worse; ours is balanced)
+                enc_real = int(L[:, 0].sum())
+                dec_real = int(L[:, 1].sum())
+                enc_pad = sum(m.mbs * (m.seq[0] if isinstance(m.seq, tuple)
+                                       else m.seq) for m in mbs)
+                dec_pad = sum(m.mbs * (m.seq[1] if isinstance(m.seq, tuple)
+                                       else 0) for m in mbs)
+                emit(f"fig15_{arch}_seq{max_len}_dyn_enc_dec_balance", 0.0,
+                     f"enc_eff={enc_real/max(enc_pad,1):.3f};"
+                     f"dec_eff={dec_real/max(dec_pad,1):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 17: execution-planning time vs global batch size, and the
+planning-time : iteration-time ratio that determines how many CPU cores are
+needed for full overlap (paper finds <= 13)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, flan_like_lengths, timed
+from repro.configs.base import get_arch
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.planner import PlannerConfig, plan_iteration
+from repro.core.shapes import ShapePalette
+
+
+def main():
+    cfg = get_arch("gpt-paper")
+    c = 4
+    cost = AnalyticCostModel(cfg, n_stages=c)
+    pal = ShapePalette.build(min_seq=128, max_seq=2048, max_mbs=512)
+    pcfg = PlannerConfig(n_stages=c, device_mem=16e9, d_model=cfg.d_model,
+                         palette=pal)
+    for gbt in (16384, 65536, 262144):
+        lengths = flan_like_lengths(gbt, 2048, seed=0)[0][:, 0]
+        it, dt = timed(plan_iteration, lengths, cost, pcfg, repeat=2)
+        ratio = dt / it.predicted_iteration_time
+        emit(f"fig17_planning_gbs{gbt}", dt * 1e6,
+             f"n_samples={len(lengths)};plan_s={dt:.3f};"
+             f"plan_to_iter_ratio={ratio:.2f};"
+             f"cores_for_full_overlap={int(np.ceil(ratio))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 7 / 16b: pipeline schedule robustness under execution-time
+variation (zero-mean Gaussian noise), 1F1B vs memory-aware adaptive; plus
+the adaptive-vs-1F1B throughput ablation with real DynaPipe micro-batches."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, flan_like_lengths
+from repro.configs.base import get_arch
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.microbatch import dp_split, order_samples, _as2d
+from repro.core.planner import PlannerConfig, plan_iteration
+from repro.core.schedule import schedule_1f1b, schedule_adaptive
+from repro.core.shapes import ShapePalette
+from repro.core.simulator import simulate
+
+
+def fig7_noise_sweep():
+    m = 16
+    for c in (4, 8):
+        am = np.full((m, c), 1.0)
+        o1 = schedule_1f1b(m, c)
+        oa = schedule_adaptive(m, c, am, mem_limit=1e9)
+        base1 = simulate(o1, 1.0, 2.0).makespan
+        basea = simulate(oa, 1.0, 2.0).makespan
+        for noise in (0.0, 0.1, 0.2, 0.3, 0.5):
+            m1 = np.mean([simulate(o1, 1.0, 2.0, noise_std=noise,
+                                   rng=np.random.default_rng(s)).makespan
+                          for s in range(16)])
+            ma = np.mean([simulate(oa, 1.0, 2.0, noise_std=noise,
+                                   rng=np.random.default_rng(s)).makespan
+                          for s in range(16)])
+            emit(f"fig7_c{c}_noise{noise}_1f1b", m1 * 1e6,
+                 f"normalized={m1/base1:.3f}")
+            emit(f"fig7_c{c}_noise{noise}_adaptive", ma * 1e6,
+                 f"normalized={ma/basea:.3f}")
+
+
+def fig16b_schedule_ablation():
+    cfg = get_arch("gpt-paper")
+    c = 4
+    cost = AnalyticCostModel(cfg, n_stages=c)
+    pal = ShapePalette.build(min_seq=128, max_seq=4096, max_mbs=512)
+    for gbt in (16384, 65536):
+        lengths = flan_like_lengths(gbt, 4096, seed=0)[0][:, 0]
+        for schedule in ("1f1b", "adaptive"):
+            pcfg = PlannerConfig(n_stages=c, device_mem=16e9,
+                                 d_model=cfg.d_model, palette=pal,
+                                 schedule=schedule)
+            it = plan_iteration(lengths, cost, pcfg)
+            tput = np.sum(lengths) / it.predicted_iteration_time
+            emit(f"fig16b_gbs{gbt}_{schedule}",
+                 it.predicted_iteration_time * 1e6,
+                 f"tokens_per_s={tput:.0f}")
+
+
+def main():
+    fig7_noise_sweep()
+    fig16b_schedule_ablation()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Fig. 4/13/14: training throughput — packing (MLM+DS-style) vs
+DynaPipe dynamic micro-batching, under max-seq-len scaling and global-batch
+scaling.
+
+Methodology on this CPU-only container: throughput = non-padding tokens /
+simulated iteration makespan, where makespans come from the event-driven
+pipeline simulator driven by the v5e analytic cost model — the same
+machinery the planner itself uses (the paper measures wall clock on A100s;
+trends, not absolute numbers, are the comparable quantity). The packing
+baseline runs the *same* simulator with packed uniform micro-batches, so the
+comparison isolates the batching/scheduling policy exactly like the paper's
+MLM+DS(c) configuration (same parallelism for both systems).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, flan_like_lengths
+from repro.configs.base import get_arch
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.microbatch import padding_efficiency, _as2d
+from repro.core.packing import packing_micro_batches, pack_first_fit, packing_efficiency
+from repro.core.planner import PlannerConfig, plan_iteration, plan_replica, _mb_specs
+from repro.core.shapes import ShapePalette
+from repro.core.schedule import schedule_1f1b
+from repro.core.simulator import simulate
+
+
+def _packing_makespan(lengths, max_len, cost, c, rows_per_mb=4):
+    L = _as2d(lengths)
+    mbs = packing_micro_batches(L, max_len, rows_per_mb, cost)
+    n = len(mbs)
+    tf = np.array([[m.t_fwd / c] * c for m in mbs])
+    tb = np.array([[m.t_bwd / c] * c for m in mbs])
+    sim = simulate(schedule_1f1b(n, c), tf, tb)
+    rows = pack_first_fit(L, max_len)
+    real_tokens = sum(min(int(x.sum()), max_len) for x in L)
+    return sim.makespan, real_tokens, packing_efficiency(rows)
+
+
+def run(arch="gpt-paper", c=4, global_tokens=65536, seeds=(0, 1)):
+    cfg = get_arch(arch)
+    cost = AnalyticCostModel(cfg, n_stages=c)
+    results = []
+    for max_len in (512, 2048, 8192):
+        pal = ShapePalette.build(min_seq=128, max_seq=max_len, max_mbs=512)
+        pcfg = PlannerConfig(n_stages=c, device_mem=16e9, d_model=cfg.d_model,
+                             palette=pal)
+        tp_dyn, tp_pack = [], []
+        eff_dyn, eff_pack = [], []
+        for seed in seeds:
+            lengths = flan_like_lengths(global_tokens, max_len, seed=seed)[0][:, 0]
+            it = plan_iteration(lengths, cost, pcfg)
+            tokens = int(np.sum(lengths))
+            tp_dyn.append(tokens / it.predicted_iteration_time)
+            eff_dyn.append(it.padding_efficiency)
+            mk, real, pe = _packing_makespan(lengths, max_len, cost, c)
+            tp_pack.append(real / mk)
+            eff_pack.append(pe)
+        d, p = np.mean(tp_dyn), np.mean(tp_pack)
+        emit(f"fig13_throughput_{arch}_seq{max_len}_dynapipe",
+             1e6 / d, f"tokens_per_s={d:.0f}")
+        emit(f"fig13_throughput_{arch}_seq{max_len}_packing",
+             1e6 / p, f"tokens_per_s={p:.0f};speedup={d/p:.2f}x")
+        results.append((max_len, d / p, np.mean(eff_dyn), np.mean(eff_pack)))
+
+    for gbt in (16384, 65536, 262144):
+        pal = ShapePalette.build(min_seq=128, max_seq=2048, max_mbs=512)
+        pcfg = PlannerConfig(n_stages=c, device_mem=16e9, d_model=cfg.d_model,
+                             palette=pal)
+        lengths = flan_like_lengths(gbt, 2048, seed=0)[0][:, 0]
+        it = plan_iteration(lengths, cost, pcfg)
+        d = np.sum(lengths) / it.predicted_iteration_time
+        mk, real, _ = _packing_makespan(lengths, 2048, cost, c)
+        p = real / mk
+        emit(f"fig14_throughput_{arch}_gbs{gbt}_dynapipe", 1e6 / d,
+             f"tokens_per_s={d:.0f}")
+        emit(f"fig14_throughput_{arch}_gbs{gbt}_packing", 1e6 / p,
+             f"tokens_per_s={p:.0f};speedup={d/p:.2f}x")
+    return results
+
+
+def main():
+    run("gpt-paper")
+    run("t5-paper")
+
+
+if __name__ == "__main__":
+    main()

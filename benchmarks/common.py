@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: the paper's experimental grid in miniature."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.cost_model import AnalyticCostModel
+from repro.data.synthetic import MultiTaskDataset, minibatches_by_token_budget
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def flan_like_lengths(global_tokens: int, max_len: int, seed: int = 0,
+                      encdec: bool = False, n_iters: int = 1):
+    ds = MultiTaskDataset(n_tasks=64, max_len=max_len, seed=seed, encdec=encdec)
+    return list(minibatches_by_token_budget(ds, global_tokens, n_iters))
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

@@ -1,0 +1,112 @@
+"""§Roofline derivation (assignment deliverable g).
+
+Reads the dry-run JSONs (experiments/dryrun/*.json) and derives, per
+(arch × shape × mesh):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+  memory term     = HLO_HBM_bytes_per_device / HBM_bw           [s]
+  collective term = ICI_link_bytes_per_device / link_bw         [s]
+
+(All three numerators are per-device, trip-count-aware — launch/hlo_cost.py;
+dividing per-device work by per-chip peaks is identical to the assignment's
+global/(chips × peak) form.) Also reports MODEL_FLOPS = 6·N·D (6·N_active·D
+for MoE; 2·N·D for pure inference steps), the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, the dominant term, and the roofline fraction
+bound = compute_term / max(all terms).
+
+Output: markdown table (stdout + experiments/roofline.md) consumed by
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES, get_arch
+from repro.core.cost_model import V5E
+
+DRY = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "roofline.md"
+
+
+def model_flops_per_device(rec) -> float:
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_active = cfg.n_params_active()
+    chips = rec["n_chips"]
+    if shape.kind == "train":
+        tokens = shape.tokens
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def analyze_record(rec) -> dict:
+    c = rec["cost"]
+    flops = c.get("hlo_flops_per_device", c["flops_per_device"])
+    hbm = c.get("hlo_hbm_bytes_per_device", c["bytes_per_device"])
+    coll = rec.get("collectives_trip_aware",
+                   rec["collectives"]).get("total_link_bytes", 0.0)
+    t_compute = flops / V5E.peak_flops
+    t_memory = hbm / V5E.hbm_bw
+    t_coll = coll / V5E.ici_bw
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+        "mem_gb": rec["memory"]["device_bytes_est"] / 1e9,
+        "fits_hbm": rec["memory"]["device_bytes_est"] <= V5E.hbm_bytes,
+    }
+
+
+def main(mesh_filter: str = "16x16"):
+    from repro.configs.base import all_cells
+    rows = []
+    for f in sorted(glob.glob(str(DRY / "*.json"))):
+        rec = json.loads(Path(f).read_text())
+        if not rec.get("runnable") or rec["mesh"] != mesh_filter:
+            continue
+        rows.append(analyze_record(rec))
+    # the 9 assignment-rule skips complete the 40-cell grid
+    for arch, shape, ok, why in all_cells():
+        if not ok:
+            rows.append({"arch": arch, "shape": shape, "mesh": mesh_filter,
+                         "skip": why})
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "6ND/HLO | roofline frac | mem GB | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP | — | — | — | {r['skip']} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['mem_gb']:.1f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    table = "\n".join(lines)
+    print(table)
+    out = OUT if mesh_filter == "16x16" else OUT.with_name(
+        f"roofline_{mesh_filter.replace('x', '_')}.md")
+    out.write_text(table + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,46 @@
+"""Benchmark runner: one section per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline terms are derived
+from the compiled dry-run artifacts when experiments/dryrun is populated
+(run ``python -m repro.launch.dryrun --all`` first for that section).
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_costmodel, bench_microbatch, bench_padding,
+                            bench_planning, bench_schedule, bench_throughput)
+    sections = [
+        ("Fig3+18: layer time & cost-model accuracy", bench_costmodel.main),
+        ("Fig13/14/4: throughput vs packing", bench_throughput.main),
+        ("Fig5/16a: micro-batching ablation", bench_microbatch.main),
+        ("Fig7/16b: schedule robustness", bench_schedule.main),
+        ("Fig15: padding efficiency", bench_padding.main),
+        ("Fig17: planning time", bench_planning.main),
+    ]
+    failures = []
+    for name, fn in sections:
+        print(f"\n# {name}", flush=True)
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+
+    print("\n# Roofline (from dry-run artifacts, if present)", flush=True)
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception as e:
+        print(f"roofline section skipped: {e}")
+
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark sections failed: "
+                         f"{[f[0] for f in failures]}")
+    print("\nALL BENCHMARK SECTIONS COMPLETED")
+
+
+if __name__ == "__main__":
+    main()

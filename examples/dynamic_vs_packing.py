@@ -1,0 +1,107 @@
+"""Dynamic micro-batching vs packing, end-to-end on real compute (deliverable
+b, paper Fig. 4 in miniature).
+
+Trains the SAME tiny model on the SAME multi-task stream two ways:
+  1. packing: samples packed into fixed 256-token rows, segment-ids carried
+     so the (ragged-attention-equivalent) masking prevents cross-sample
+     contamination — the MLM+DS baseline;
+  2. DynaPipe: per-iteration DP micro-batching at bucketed shapes.
+Reports wall-clock, processed-token throughput, and padding efficiency.
+
+    PYTHONPATH=src python examples/dynamic_vs_packing.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.microbatch import padding_efficiency, _as2d
+from repro.core.packing import pack_first_fit, packing_efficiency
+from repro.core.planner import PlannerConfig, plan_iteration
+from repro.core.shapes import ShapePalette
+from repro.data.dataset import materialize_micro_batch, materialize_packed_rows
+from repro.data.synthetic import MultiTaskDataset
+from repro.models import model as MD
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+MAX_LEN = 256
+ITERS = 12
+
+
+def grad_step(cfg):
+    @jax.jit
+    def f(params, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: MD.loss_fn(p, batch, cfg), has_aux=True)(params)
+        return loss, g
+    return f
+
+
+def run_packing(cfg, ds, params, opt, opt_cfg, step):
+    t0 = time.perf_counter()
+    tokens_done, losses = 0, []
+    for it in range(ITERS):
+        lengths, tokens, _ = ds.sample_minibatch(24, cfg.vocab)
+        rows = pack_first_fit(lengths, MAX_LEN)
+        batch = materialize_packed_rows(rows, tokens, MAX_LEN)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, g = step(params, batch)
+        params, opt, _ = adamw_update(params, g, opt, opt_cfg)
+        losses.append(float(loss))
+        tokens_done += int(batch["loss_weights"].sum())
+    dt = time.perf_counter() - t0
+    eff = packing_efficiency(rows)
+    return dt, tokens_done, losses, eff
+
+
+def run_dynapipe(cfg, ds, params, opt, opt_cfg, step, pcfg, cost):
+    t0 = time.perf_counter()
+    tokens_done, losses = 0, []
+    for it in range(ITERS):
+        lengths, tokens, _ = ds.sample_minibatch(24, cfg.vocab)
+        plan = plan_iteration(lengths[:, 0], cost, pcfg)
+        mb_losses = []
+        for m in plan.replica_plans[0].micro_batches:
+            batch = materialize_micro_batch(m, tokens)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            loss, g = step(params, batch)
+            params, opt, _ = adamw_update(params, g, opt, opt_cfg)
+            mb_losses.append(float(loss))
+            tokens_done += int(batch["loss_weights"].sum())
+        losses.append(float(np.mean(mb_losses)))
+    dt = time.perf_counter() - t0
+    return dt, tokens_done, losses, plan.padding_efficiency
+
+
+def main():
+    cfg = dataclasses.replace(reduced(get_arch("gpt-paper")), n_layers=2)
+    ds = MultiTaskDataset(n_tasks=16, max_len=MAX_LEN, seed=0)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params, opt_cfg)
+    step = grad_step(cfg)
+
+    cost = AnalyticCostModel(cfg, n_stages=1)
+    pal = ShapePalette.build(min_seq=32, max_seq=MAX_LEN, seq_align=32,
+                             max_mbs=32)
+    pcfg = PlannerConfig(n_stages=1, d_model=cfg.d_model, palette=pal)
+
+    dt_p, tok_p, loss_p, eff_p = run_packing(cfg, ds, params, opt, opt_cfg, step)
+    dt_d, tok_d, loss_d, eff_d = run_dynapipe(cfg, ds, params, opt, opt_cfg,
+                                              step, pcfg, cost)
+    print(f"packing : {dt_p:6.1f}s  {tok_p/dt_p:8.0f} tok/s  "
+          f"padding_eff={eff_p:.2f}  loss {loss_p[0]:.2f}->{loss_p[-1]:.2f}")
+    print(f"dynapipe: {dt_d:6.1f}s  {tok_d/dt_d:8.0f} tok/s  "
+          f"padding_eff={eff_d:.2f}  loss {loss_d[0]:.2f}->{loss_d[-1]:.2f}")
+    print(f"\nthroughput ratio (dynapipe/packing): {(tok_d/dt_d)/(tok_p/dt_p):.2f}x")
+    print("(CPU trend only; the paper's 4.39x/3.25x comes from the quadratic "
+          "attention waste at 8k rows on GPU — see benchmarks/bench_throughput.py "
+          "for the simulated A100-scale comparison)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: plan one DynaPipe iteration and inspect every artifact.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's full §4-§6 pipeline on a FLAN-like mini-batch: sample
+ordering -> DP micro-batch construction -> Karmarkar-Karp replica balancing
+-> memory-aware adaptive schedule -> deadlock-free communication plan, and
+prints the resulting execution plan + predicted makespan vs baselines.
+"""
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.microbatch import padding_efficiency, _as2d
+from repro.core.packing import pack_first_fit, packing_efficiency
+from repro.core.planner import PlannerConfig, plan_iteration
+from repro.core.shapes import ShapePalette
+from repro.data.synthetic import MultiTaskDataset
+
+N_STAGES, DP = 4, 2
+
+print("=" * 72)
+print("DynaPipe quickstart: planning one multi-task training iteration")
+print("=" * 72)
+
+ds = MultiTaskDataset(n_tasks=64, max_len=8192, seed=0)
+lengths = ds.sample_lengths(192)[:, 0]
+print(f"\nmini-batch: {len(lengths)} samples, lengths "
+      f"p5={np.percentile(lengths,5):.0f} p50={np.percentile(lengths,50):.0f} "
+      f"p95={np.percentile(lengths,95):.0f} max={lengths.max()}")
+naive_eff = lengths.sum() / (lengths.max() * len(lengths))
+print(f"naive padding efficiency (pad-to-max): {naive_eff:.1%}  "
+      f"<- the paper's >80% waste problem")
+
+cfg = get_arch("gpt-paper")
+cost = AnalyticCostModel(cfg, n_stages=N_STAGES)
+palette = ShapePalette.build(min_seq=128, max_seq=8192)
+pcfg = PlannerConfig(n_stages=N_STAGES, dp_size=DP, device_mem=16e9,
+                     d_model=cfg.d_model, palette=palette)
+
+it = plan_iteration(lengths, cost, pcfg)
+
+print(f"\nDP split -> {len(it.micro_batches)} micro-batches "
+      f"(padding efficiency {it.padding_efficiency:.1%}):")
+for m in it.micro_batches[:8]:
+    print(f"  {m.n_samples:3d} samples -> padded ({m.mbs} x {m.seq})  "
+          f"t={m.t*1e3:6.1f} ms  mem={m.mem/1e9:5.2f} GB")
+if len(it.micro_batches) > 8:
+    print(f"  ... and {len(it.micro_batches)-8} more")
+
+rows = pack_first_fit(_as2d(lengths), 8192)
+print(f"\npacking baseline would fill {len(rows)} rows at 8192 "
+      f"(efficiency {packing_efficiency(rows):.1%}) but pays quadratic "
+      f"attention over 8192-token rows")
+
+plan = it.replica_plans[0]
+print(f"\nreplica 0 execution plan: {plan.n_stages} stages, "
+      f"{sum(len(s) for s in plan.per_stage)} instructions")
+print("stage-0 instruction stream (head):",
+      " ".join(i.short() for i in plan.per_stage[0][:12]), "...")
+print(f"predicted makespan: {plan.predicted_makespan*1e3:.1f} ms | "
+      f"peak activation mem per stage: "
+      f"{[f'{m/1e9:.2f}GB' for m in plan.predicted_peak_mem]}")
+print(f"planning took {it.planning_seconds*1e3:.0f} ms on one CPU core "
+      f"(overlapped with execution in the training loop)")

@@ -1,0 +1,68 @@
+"""End-to-end driver (deliverable b): train a ~100M-param GPT on a synthetic
+multi-task mixture for a few hundred steps with the full DynaPipe stack —
+planner-overlapped dynamic micro-batching, the threaded pipeline executor,
+AdamW, and checkpointing.
+
+    PYTHONPATH=src python examples/train_multitask.py [--iters 200] [--small]
+
+``--small`` shrinks to a seconds-scale smoke configuration; the default is
+a ~100M model × a few hundred steps (tens of minutes on 1 CPU).
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.planner import PlannerConfig
+from repro.core.shapes import ShapePalette
+from repro.train.loop import LoopConfig, train
+from repro.train.optimizer import AdamWConfig
+
+
+def model_100m() -> ArchConfig:
+    # ~105M params: 8L, d=512, 8H, ffn 2048, vocab 32k (GPT-2-small-ish)
+    return ArchConfig(
+        name="gpt-100m", family="dense", n_layers=8, d_model=512,
+        n_heads=8, n_kv_heads=8, d_head=64, d_ff=2048, vocab=32000,
+        layer_pattern=(LayerSpec("attn"),), mlp_gated=False, act="gelu",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/dynapipe_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    if args.small:
+        cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, n_heads=4,
+                                  n_kv_heads=4, d_head=32, d_ff=512, vocab=2048)
+        args.iters = min(args.iters, 30)
+    print(f"model: {cfg.n_params()/1e6:.1f}M params, "
+          f"{args.stages} pipeline stages")
+
+    max_seq = 512
+    palette = ShapePalette.build(min_seq=32, max_seq=max_seq, seq_align=32,
+                                 max_mbs=32)
+    cost = AnalyticCostModel(cfg, n_stages=args.stages)
+    pcfg = PlannerConfig(n_stages=args.stages, device_mem=16e9,
+                         d_model=cfg.d_model, palette=palette)
+    lcfg = LoopConfig(n_iters=args.iters, global_tokens=8192,
+                      use_executor=args.stages > 1,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
+    params, hist = train(cfg, cost, pcfg, lcfg,
+                         opt_cfg=AdamWConfig(lr=3e-4))
+    first = sum(h["loss"] for h in hist[:10]) / min(10, len(hist))
+    last = sum(h["loss"] for h in hist[-10:]) / min(10, len(hist))
+    mb_counts = [h["n_micro"] for h in hist]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {len(hist)} iters "
+          f"({'improved' if last < first else 'NOT improved'})")
+    print(f"micro-batches/iter: min={min(mb_counts)} max={max(mb_counts)} "
+          f"(dynamic, per-iteration planning)")
+
+
+if __name__ == "__main__":
+    main()

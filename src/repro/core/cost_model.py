@@ -1,0 +1,219 @@
+"""Per-layer time & memory cost models (paper §3 "Cost models", §8.6).
+
+Two implementations behind one interface:
+
+- :class:`AnalyticCostModel` — closed-form roofline model over TPU v5e
+  constants (197 TFLOP/s bf16, 819 GB/s HBM). Used in this CPU-only container
+  wherever the paper would read a profiled table, and calibrated by the same
+  constants the dry-run roofline uses.
+- :class:`ProfiledCostModel` — the paper's mechanism: measure fwd/bwd time
+  and peak memory on a power-of-two (micro_batch, seq_len) grid and
+  bilinearly interpolate in log2-space. ``profile_fn`` can wrap a real jitted
+  step (tests profile a tiny model on CPU; on device it wraps the real model).
+
+All times are seconds for a *stage* = ``n_layers / n_stages`` layers of the
+model; memory is bytes of activation a single micro-batch pins on a stage
+between its forward and backward pass.
+
+Encoder-decoder models take 2D lengths (enc_len, dec_len); decoder-only
+models use scalar lengths (dec_len = 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class HWSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # B/s per chip
+    ici_bw: float = 50e9              # B/s per link
+    hbm_bytes: float = 16e9           # per chip
+    efficiency: float = 0.5           # sustained fraction of peak
+    per_op_overhead: float = 5e-6     # dispatch overhead per stage step
+
+
+V5E = HWSpec()
+
+
+def _mxu_pad(n: int, align: int = 8) -> int:
+    return max(align, -(-n // align) * align)
+
+
+class CostModel:
+    """Interface used by the planner / DP splitter / scheduler."""
+
+    def stage_fwd_time(self, mbs: int, seq, tp: int = 1) -> float:
+        raise NotImplementedError
+
+    def stage_bwd_time(self, mbs: int, seq, tp: int = 1) -> float:
+        return 2.0 * self.stage_fwd_time(mbs, seq, tp)
+
+    def stage_time(self, mbs: int, seq, tp: int = 1) -> float:
+        return self.stage_fwd_time(mbs, seq, tp) + self.stage_bwd_time(mbs, seq, tp)
+
+    def stage_act_memory(self, mbs: int, seq, tp: int = 1) -> float:
+        raise NotImplementedError
+
+
+class AnalyticCostModel(CostModel):
+    def __init__(self, cfg: ArchConfig, n_stages: int = 1, hw: HWSpec = V5E,
+                 remat: str = "full"):
+        self.cfg = cfg
+        self.n_stages = n_stages
+        self.hw = hw
+        self.remat = remat  # "full" | "selective" | "none"
+
+    # -------------------- flops / bytes per layer ----------------------
+    def _layer_flops_per_seq(self, mbs: int, seq: int, spec) -> float:
+        """Forward FLOPs of one layer over one micro-batch row of length seq."""
+        cfg = self.cfg
+        d = cfg.d_model
+        t = seq
+        fl = 0.0
+        if spec.mixer.startswith("attn"):
+            h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            fl += 2 * t * d * (h * dh)            # q proj
+            fl += 2 * 2 * t * d * (kv * dh)        # k,v proj
+            fl += 2 * t * (h * dh) * d             # o proj
+            eff_ctx = t / 2
+            if spec.mixer == "attn_local" and cfg.window and t > cfg.window:
+                eff_ctx = cfg.window / 2 + (t - cfg.window) * cfg.window / t
+            if not cfg.causal:
+                eff_ctx = t
+            fl += 2 * 2 * t * eff_ctx * (h * dh)   # qk^T and pv
+        elif spec.mixer == "mamba":
+            di, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+            fl += 2 * t * d * (2 * di + 2 * g * n + hh)     # in_proj
+            fl += 2 * t * (di + 2 * g * n) * cfg.ssm_conv    # conv
+            chunk = min(128, t)
+            p = cfg.ssm_headdim
+            # SSD: intra-chunk (CB^T: T_c*N, w@x: T_c*P) + state (2*N*P)
+            fl += 2 * t * hh * (chunk * n + chunk * p + 2 * n * p)
+            fl += 2 * t * di * d                              # out_proj
+        if spec.moe:
+            mult = 3 if cfg.mlp_gated else 2
+            k_active = cfg.top_k * cfg.capacity_factor + cfg.n_shared_experts
+            fl += 2 * t * d * cfg.d_ff_expert * mult * k_active
+            fl += 2 * t * d * cfg.n_experts                   # router
+        elif cfg.d_ff:
+            mult = 3 if cfg.mlp_gated else 2
+            fl += 2 * t * d * cfg.d_ff * mult
+        return mbs * fl
+
+    def _layer_bytes_per_seq(self, mbs: int, seq: int, spec) -> float:
+        """HBM traffic of one layer (weights once + activations)."""
+        cfg = self.cfg
+        d = cfg.d_model
+        wbytes = 0.0
+        if spec.mixer.startswith("attn"):
+            wbytes += 2 * (d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
+                           + cfg.n_heads * cfg.d_head * d)
+        elif spec.mixer == "mamba":
+            di, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+            wbytes += 2 * (d * (2 * di + 2 * g * n + hh) + di * d)
+        if spec.moe:
+            mult = 3 if cfg.mlp_gated else 2
+            act_e = min(cfg.n_experts, mbs * seq * cfg.top_k)  # touched experts
+            wbytes += 2 * mult * d * cfg.d_ff_expert * (act_e + cfg.n_shared_experts)
+        elif cfg.d_ff:
+            mult = 3 if cfg.mlp_gated else 2
+            wbytes += 2 * mult * d * cfg.d_ff
+        abytes = 2 * mbs * seq * d * 6  # rough activation reads+writes
+        return wbytes + abytes
+
+    def _mean_layer(self, fn, mbs, seq) -> float:
+        total = 0.0
+        for spec in self.cfg.layer_pattern:
+            total += fn(mbs, seq, spec)
+        return total / len(self.cfg.layer_pattern)
+
+    # --------------------------- interface -----------------------------
+    def _norm_seq(self, seq) -> tuple[int, int]:
+        if isinstance(seq, (tuple, list, np.ndarray)):
+            enc, dec = int(seq[0]), int(seq[1])
+        else:
+            enc, dec = int(seq), 0
+        return enc, dec
+
+    def stage_fwd_time(self, mbs: int, seq, tp: int = 1) -> float:
+        enc, dec = self._norm_seq(seq)
+        mbs = _mxu_pad(int(mbs))
+        layers = self.cfg.n_layers / self.n_stages
+        fl = self._mean_layer(self._layer_flops_per_seq, mbs, enc)
+        by = self._mean_layer(self._layer_bytes_per_seq, mbs, enc)
+        if dec:
+            fl += self._mean_layer(self._layer_flops_per_seq, mbs, dec) * 1.5
+            by += self._mean_layer(self._layer_bytes_per_seq, mbs, dec) * 1.5
+        fl, by = fl * layers / tp, by * layers / tp
+        t = max(fl / (self.hw.peak_flops * self.hw.efficiency),
+                by / (self.hw.hbm_bw * self.hw.efficiency))
+        return t + self.hw.per_op_overhead
+
+    def stage_act_memory(self, mbs: int, seq, tp: int = 1) -> float:
+        enc, dec = self._norm_seq(seq)
+        cfg = self.cfg
+        layers = cfg.n_layers / self.n_stages
+        tokens = mbs * (enc + dec)
+        per_layer = {"full": 2.0, "selective": 8.0, "none": 20.0}[self.remat]
+        return tokens * cfg.d_model * 2 * per_layer * layers / tp
+
+
+class ProfiledCostModel(CostModel):
+    """Power-of-two grid + bilinear interpolation in log2 space (paper §3)."""
+
+    def __init__(self, mbs_grid, seq_grid, fwd_t, bwd_t, mem):
+        """fwd_t/bwd_t/mem: arrays (len(mbs_grid), len(seq_grid))."""
+        self.mbs_grid = np.asarray(mbs_grid, dtype=np.float64)
+        self.seq_grid = np.asarray(seq_grid, dtype=np.float64)
+        self.fwd_t = np.asarray(fwd_t, dtype=np.float64)
+        self.bwd_t = np.asarray(bwd_t, dtype=np.float64)
+        self.mem = np.asarray(mem, dtype=np.float64)
+
+    @classmethod
+    def profile(cls, measure, mbs_grid=(1, 2, 4, 8), seq_grid=(32, 64, 128, 256)):
+        """measure(mbs, seq) -> (fwd_s, bwd_s, mem_bytes); fills the table."""
+        fwd = np.zeros((len(mbs_grid), len(seq_grid)))
+        bwd = np.zeros_like(fwd)
+        mem = np.zeros_like(fwd)
+        for i, m in enumerate(mbs_grid):
+            for j, s in enumerate(seq_grid):
+                fwd[i, j], bwd[i, j], mem[i, j] = measure(int(m), int(s))
+        return cls(mbs_grid, seq_grid, fwd, bwd, mem)
+
+    def _interp(self, table, mbs, seq) -> float:
+        lx = math.log2(max(mbs, 1e-9))
+        ly = math.log2(max(seq, 1e-9))
+        gx = np.log2(self.mbs_grid)
+        gy = np.log2(self.seq_grid)
+        i = int(np.clip(np.searchsorted(gx, lx) - 1, 0, len(gx) - 2))
+        j = int(np.clip(np.searchsorted(gy, ly) - 1, 0, len(gy) - 2))
+        tx = np.clip((lx - gx[i]) / (gx[i + 1] - gx[i]), 0.0, None)
+        ty = np.clip((ly - gy[j]) / (gy[j + 1] - gy[j]), 0.0, None)
+        # linear (extrapolating) blend in log-log space
+        v00, v01 = table[i, j], table[i, j + 1]
+        v10, v11 = table[i + 1, j], table[i + 1, j + 1]
+        v0 = v00 + (v01 - v00) * ty
+        v1 = v10 + (v11 - v10) * ty
+        return float(max(v0 + (v1 - v0) * tx, 0.0))
+
+    def _norm_seq(self, seq) -> float:
+        if isinstance(seq, (tuple, list, np.ndarray)):
+            return float(seq[0]) + 1.5 * float(seq[1])
+        return float(seq)
+
+    def stage_fwd_time(self, mbs, seq, tp: int = 1) -> float:
+        return self._interp(self.fwd_t, mbs, self._norm_seq(seq)) / tp
+
+    def stage_bwd_time(self, mbs, seq, tp: int = 1) -> float:
+        return self._interp(self.bwd_t, mbs, self._norm_seq(seq)) / tp
+
+    def stage_act_memory(self, mbs, seq, tp: int = 1) -> float:
+        return self._interp(self.mem, mbs, self._norm_seq(seq)) / tp

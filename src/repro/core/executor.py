@@ -1,0 +1,241 @@
+"""Instruction executor (paper §3 "Executors").
+
+Interprets :class:`ExecutionPlan` streams over ``n_stages`` pipeline stages,
+each stage a thread driving real JAX compute:
+
+- compute thread: FORWARD / BACKWARD / WAIT_* / REDUCE_AND_STEP in stream order
+- comm thread per stage (the "communication stream"): executes SEND_*_START /
+  RECV_*_START in stream order against **rendezvous, in-order channels** —
+  one channel per device pair, sends block until the matching receive is
+  posted and receives must consume in FIFO order (NCCL semantics, paper §2.3).
+  A mismatched global order therefore deadlocks; ``DeadlockError`` is raised
+  on timeout or tag mismatch instead of hanging, which is how the tests
+  demonstrate the paper's Fig. 8 problem and validate the §6 plan.
+
+Backward passes recompute the stage forward (activation checkpointing at
+stage granularity) via ``jax.vjp`` — matching RecomputePolicy.FULL; the only
+stashed state per in-flight micro-batch is its stage input, which is what the
+planner's memory model charges.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instructions import ExecutionPlan, Instr, Op
+
+
+class DeadlockError(RuntimeError):
+    pass
+
+
+class Channel:
+    """In-order rendezvous channel between one (src, dst) stage pair."""
+
+    def __init__(self, name: str, timeout: float):
+        self.name = name
+        self.timeout = timeout
+        self._cv = threading.Condition()
+        self._queue: deque = deque()        # (tag, payload, consumed_event)
+
+    def send(self, tag, payload):
+        ev = threading.Event()
+        with self._cv:
+            self._queue.append((tag, payload, ev))
+            self._cv.notify_all()
+        if not ev.wait(self.timeout):
+            raise DeadlockError(
+                f"channel {self.name}: send {tag} never matched by a receive "
+                "(communication order mismatch)")
+
+    def recv(self, tag):
+        with self._cv:
+            ok = self._cv.wait_for(lambda: len(self._queue) > 0, self.timeout)
+            if not ok:
+                raise DeadlockError(
+                    f"channel {self.name}: recv {tag} timed out (no send posted)")
+            head_tag, payload, ev = self._queue[0]
+            if head_tag != tag:
+                raise DeadlockError(
+                    f"channel {self.name}: recv expected {tag} but channel "
+                    f"head is {head_tag} (order mismatch -> NCCL deadlock)")
+            self._queue.popleft()
+        ev.set()
+        return payload
+
+
+@dataclass
+class StageCallbacks:
+    """The JAX side of one stage.
+
+    forward(mb_id) -> None           stage 0 pulls its own micro-batch input
+    forward(mb_id, h_in)             other stages consume the received tensor
+      both return h_out (sent downstream) or None on the last stage
+    backward(mb_id, g_out | None) -> g_in | None
+      last stage passes g_out=None (it owns the loss)
+    step() -> None                   REDUCE_AND_STEP
+    """
+    forward: Callable
+    backward: Callable
+    step: Callable
+
+
+class StageExecutor:
+    def __init__(self, stage: int, n_stages: int, plan_stream: list[Instr],
+                 callbacks: StageCallbacks, channels: dict, timeout: float):
+        self.stage = stage
+        self.n_stages = n_stages
+        self.stream = plan_stream
+        self.cb = callbacks
+        self.channels = channels
+        self.timeout = timeout
+        self.comm_q: "queue.Queue[Optional[Instr]]" = queue.Queue()
+        self.recv_done: dict[tuple, threading.Event] = {}
+        self.recv_buf: dict[tuple, Any] = {}
+        self.send_buf: dict[tuple, Any] = {}
+        self.error: Optional[BaseException] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------ comm thread ------------------------
+    @staticmethod
+    def _dir(src: int, dst: int) -> str:
+        return f"{src}->{dst}"
+
+    def comm_loop(self):
+        try:
+            while True:
+                ins = self.comm_q.get()
+                if ins is None:
+                    return
+                if ins.op == Op.SEND_ACT_START:
+                    tag = ("act", ins.micro_batch)
+                    payload = self._pop_send(("act", ins.micro_batch))
+                    self.channels[self._dir(self.stage, ins.peer)].send(tag, payload)
+                elif ins.op == Op.SEND_GRAD_START:
+                    tag = ("grad", ins.micro_batch)
+                    payload = self._pop_send(("grad", ins.micro_batch))
+                    self.channels[self._dir(self.stage, ins.peer)].send(tag, payload)
+                elif ins.op == Op.RECV_ACT_START:
+                    tag = ("act", ins.micro_batch)
+                    data = self.channels[self._dir(ins.peer, self.stage)].recv(tag)
+                    self._post_recv(tag, data)
+                elif ins.op == Op.RECV_GRAD_START:
+                    tag = ("grad", ins.micro_batch)
+                    data = self.channels[self._dir(ins.peer, self.stage)].recv(tag)
+                    self._post_recv(tag, data)
+        except BaseException as e:  # propagate to join()
+            self.error = e
+
+    def _pop_send(self, key):
+        # payload must have been produced by the compute thread already
+        # (Start ops are planned at production time), so this never blocks
+        # long; guard anyway.
+        import time
+        t0 = time.monotonic()
+        while True:
+            with self._lock:
+                if key in self.send_buf:
+                    return self.send_buf.pop(key)
+            if time.monotonic() - t0 > self.timeout:
+                raise DeadlockError(f"stage {self.stage}: send payload {key} "
+                                    "never produced")
+            time.sleep(0.0005)
+
+    def _post_recv(self, tag, data):
+        with self._lock:
+            self.recv_buf[tag] = data
+            ev = self.recv_done.setdefault(tag, threading.Event())
+        ev.set()
+
+    def _wait_recv(self, tag):
+        with self._lock:
+            ev = self.recv_done.setdefault(tag, threading.Event())
+        if not ev.wait(self.timeout):
+            raise DeadlockError(f"stage {self.stage}: wait on {tag} timed out")
+        with self._lock:
+            return self.recv_buf.pop(tag)
+
+    # ----------------------------- compute thread ----------------------
+    def compute_loop(self):
+        try:
+            for ins in self.stream:
+                if ins.op in (Op.SEND_ACT_START, Op.SEND_GRAD_START,
+                              Op.RECV_ACT_START, Op.RECV_GRAD_START):
+                    self.comm_q.put(ins)
+                elif ins.op == Op.WAIT_RECV_ACT:
+                    h = self._wait_recv(("act", ins.micro_batch))
+                    with self._lock:
+                        self.recv_buf[("act_ready", ins.micro_batch)] = h
+                elif ins.op == Op.WAIT_RECV_GRAD:
+                    g = self._wait_recv(("grad", ins.micro_batch))
+                    with self._lock:
+                        self.recv_buf[("grad_ready", ins.micro_batch)] = g
+                elif ins.op == Op.FORWARD:
+                    if self.stage == 0:
+                        h_out = self.cb.forward(ins.micro_batch)
+                    else:
+                        with self._lock:
+                            h_in = self.recv_buf.pop(("act_ready", ins.micro_batch))
+                        h_out = self.cb.forward(ins.micro_batch, h_in)
+                    if self.stage + 1 < self.n_stages:
+                        with self._lock:
+                            self.send_buf[("act", ins.micro_batch)] = h_out
+                elif ins.op == Op.BACKWARD:
+                    if self.stage + 1 < self.n_stages:
+                        with self._lock:
+                            g_out = self.recv_buf.pop(("grad_ready", ins.micro_batch))
+                    else:
+                        g_out = None
+                    g_in = self.cb.backward(ins.micro_batch, g_out)
+                    if self.stage > 0:
+                        with self._lock:
+                            self.send_buf[("grad", ins.micro_batch)] = g_in
+                elif ins.op == Op.REDUCE_AND_STEP:
+                    self.cb.step()
+            self.comm_q.put(None)
+        except BaseException as e:
+            self.error = e
+            self.comm_q.put(None)
+
+
+class PipelineExecutor:
+    """Runs one iteration's ExecutionPlan across all stages (threads)."""
+
+    def __init__(self, plan: ExecutionPlan, callbacks: list[StageCallbacks],
+                 timeout: float = 30.0):
+        self.plan = plan
+        self.callbacks = callbacks
+        self.timeout = timeout
+
+    def run(self):
+        c = self.plan.n_stages
+        channels = {}
+        for j in range(c - 1):
+            channels[f"{j}->{j+1}"] = Channel(f"{j}->{j+1}", self.timeout)
+            channels[f"{j+1}->{j}"] = Channel(f"{j+1}->{j}", self.timeout)
+        stages = [
+            StageExecutor(j, c, self.plan.per_stage[j], self.callbacks[j],
+                          channels, self.timeout)
+            for j in range(c)
+        ]
+        threads = []
+        for s in stages:
+            tc = threading.Thread(target=s.compute_loop, daemon=True)
+            tm = threading.Thread(target=s.comm_loop, daemon=True)
+            threads += [tc, tm]
+            tc.start()
+            tm.start()
+        for t in threads:
+            t.join(self.timeout * (len(self.plan.micro_batches) + 4))
+        for s in stages:
+            if s.error is not None:
+                raise s.error
+        for t in threads:
+            if t.is_alive():
+                raise DeadlockError("executor threads did not terminate")

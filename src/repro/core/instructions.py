@@ -1,0 +1,132 @@
+"""Pipeline instruction set + serializable execution plans (paper §3).
+
+Instruction kinds mirror DynaPipe/DeepSpeed: compute ops (FORWARD, BACKWARD)
+and conjugate communication pairs — a *Start* op that launches an async
+send/recv on the communication stream, and a *Wait* op that fences the
+compute stream on it. The executor (core/executor.py) interprets these; the
+planner (core/planner.py) emits them.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from enum import Enum
+from typing import Any, Optional
+
+
+class Op(str, Enum):
+    FORWARD = "F"
+    BACKWARD = "B"
+    SEND_ACT_START = "SA+"
+    RECV_ACT_START = "RA+"
+    WAIT_RECV_ACT = "RA!"
+    SEND_GRAD_START = "SG+"
+    RECV_GRAD_START = "RG+"
+    WAIT_RECV_GRAD = "RG!"
+    # optimizer step after the last backward of the iteration
+    REDUCE_AND_STEP = "OPT"
+
+
+class RecomputePolicy(str, Enum):
+    NONE = "none"
+    SELECTIVE = "selective"
+    FULL = "full"
+
+
+@dataclass(frozen=True)
+class Instr:
+    op: Op
+    micro_batch: int = -1
+    peer: int = -1                     # peer stage for comm ops
+    shape: Optional[tuple] = None      # communicated tensor shape (B, S, D)
+
+    def short(self) -> str:
+        return f"{self.op.value}{self.micro_batch}" + (
+            f"->{self.peer}" if self.peer >= 0 else "")
+
+
+@dataclass
+class MicroBatchSpec:
+    """What the executor materializes for one micro-batch."""
+    mb_id: int
+    sample_indices: list[int]
+    mbs: int                            # padded rows
+    seq: Any                            # padded length (int or (enc, dec))
+    t_fwd: float
+    t_bwd: float
+    mem: float
+
+
+@dataclass
+class ExecutionPlan:
+    n_stages: int
+    micro_batches: list[MicroBatchSpec]
+    per_stage: list[list[Instr]]        # instruction stream per stage
+    recompute: RecomputePolicy = RecomputePolicy.FULL
+    predicted_makespan: float = 0.0
+    predicted_peak_mem: list[float] = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
+
+    # ---------------- serialization (instruction store) ----------------
+    def to_json(self) -> str:
+        d = {
+            "n_stages": self.n_stages,
+            "recompute": self.recompute.value,
+            "predicted_makespan": self.predicted_makespan,
+            "predicted_peak_mem": self.predicted_peak_mem,
+            "meta": self.meta,
+            "micro_batches": [asdict(m) for m in self.micro_batches],
+            "per_stage": [
+                [
+                    {"op": i.op.value, "mb": i.micro_batch, "peer": i.peer,
+                     "shape": i.shape}
+                    for i in stream
+                ]
+                for stream in self.per_stage
+            ],
+        }
+        return json.dumps(
+            d, default=lambda o: o.item() if hasattr(o, "item") else str(o))
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        d = json.loads(s)
+        return cls(
+            n_stages=d["n_stages"],
+            micro_batches=[MicroBatchSpec(**m) for m in d["micro_batches"]],
+            per_stage=[
+                [
+                    Instr(Op(i["op"]), i["mb"], i["peer"],
+                          tuple(i["shape"]) if i["shape"] else None)
+                    for i in stream
+                ]
+                for stream in d["per_stage"]
+            ],
+            recompute=RecomputePolicy(d["recompute"]),
+            predicted_makespan=d["predicted_makespan"],
+            predicted_peak_mem=d["predicted_peak_mem"],
+            meta=d["meta"],
+        )
+
+
+class InstructionStore:
+    """In-memory stand-in for the paper's Redis instruction store: planners
+    push serialized plans keyed by iteration, executors fetch (and block on)
+    them. Thread-safe."""
+
+    def __init__(self):
+        import threading
+        self._plans: dict[int, str] = {}
+        self._cv = threading.Condition()
+
+    def push(self, iteration: int, plan: ExecutionPlan) -> None:
+        with self._cv:
+            self._plans[iteration] = plan.to_json()
+            self._cv.notify_all()
+
+    def fetch(self, iteration: int, timeout: float = 60.0) -> ExecutionPlan:
+        with self._cv:
+            ok = self._cv.wait_for(lambda: iteration in self._plans, timeout)
+            if not ok:
+                raise TimeoutError(f"plan for iteration {iteration} not produced")
+            return ExecutionPlan.from_json(self._plans[iteration])

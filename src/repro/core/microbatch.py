@@ -1,0 +1,284 @@
+"""Micro-batch construction (paper §4).
+
+Pipeline: ``order_samples`` -> ``dp_split`` (the O(N^4)-worst-case dynamic
+program of Eq. 2 with the t_max sweep, banded + bucketed for speed) ->
+``balance_replicas`` (Karmarkar–Karp across data-parallel pipelines,
+extended with per-replica speed factors for straggler mitigation).
+
+The objective is the paper's Eq. 1 pipeline-makespan model:
+
+    t_iter = (c - 1) · max_i t(M_i) + (1/|D|) · Σ_i t(M_i)
+
+(|D| = number of data-parallel replicas; 1 for pure pipeline parallelism).
+Costs come from a :class:`~repro.core.cost_model.CostModel` and are charged
+at *bucketed* shapes when a :class:`~repro.core.shapes.ShapePalette` is given
+(TPU adaptation — the DP then optimizes the padded cost it will actually pay).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.shapes import ShapePalette
+
+
+@dataclass
+class MicroBatch:
+    indices: list[int]            # positions into the *ordered* sample list
+    n_samples: int
+    mbs: int                      # padded row count (bucketed)
+    seq: object                   # padded seq len (int or (enc, dec))
+    t_fwd: float
+    t_bwd: float
+    mem: float
+
+    @property
+    def t(self) -> float:
+        return self.t_fwd + self.t_bwd
+
+    @property
+    def padded_tokens(self) -> int:
+        if isinstance(self.seq, tuple):
+            return self.mbs * (self.seq[0] + self.seq[1])
+        return self.mbs * self.seq
+
+
+def _as2d(lengths) -> np.ndarray:
+    a = np.asarray(lengths, dtype=np.int64)
+    if a.ndim == 1:
+        a = np.stack([a, np.zeros_like(a)], axis=1)
+    return a
+
+
+# ----------------------------------------------------------------------
+# sample ordering (paper §4 "Determine the order of samples")
+# ----------------------------------------------------------------------
+def order_samples(lengths, method: str = "sort") -> np.ndarray:
+    """Returns a permutation of sample indices.
+
+    "sort": lexicographic by (enc_len, dec_len) — the paper's default.
+    "tsp" : greedy nearest-neighbour tour over (enc, dec) points — the
+            paper's TSP-solver alternative (§8.4 shows they perform alike).
+    """
+    pts = _as2d(lengths)
+    n = len(pts)
+    if method == "sort":
+        return np.lexsort((pts[:, 1], pts[:, 0]))
+    if method == "tsp":
+        remaining = set(range(n))
+        cur = int(np.argmin(pts.sum(1)))
+        order = [cur]
+        remaining.discard(cur)
+        p = pts.astype(np.float64)
+        while remaining:
+            rem = np.fromiter(remaining, dtype=np.int64)
+            d = np.abs(p[rem] - p[cur]).sum(axis=1)
+            cur = int(rem[np.argmin(d)])
+            order.append(cur)
+            remaining.discard(cur)
+        return np.asarray(order)
+    raise ValueError(method)
+
+
+# ----------------------------------------------------------------------
+# group cost tables
+# ----------------------------------------------------------------------
+def _group_cost(cost: CostModel, count: int, enc: int, dec: int,
+                palette: ShapePalette | None, tp: int):
+    if palette is not None:
+        count = palette.bucket_mbs(count)
+        enc = palette.bucket_seq(enc) if enc else 0
+        dec = palette.bucket_seq(dec) if dec else 0
+    seq = (enc, dec) if dec else enc
+    tf = cost.stage_fwd_time(count, seq, tp)
+    tb = cost.stage_bwd_time(count, seq, tp)
+    mem = cost.stage_act_memory(count, seq, tp)
+    return count, seq, tf, tb, mem
+
+
+def dp_split(
+    ordered_lengths,
+    cost: CostModel,
+    n_stages: int,
+    *,
+    mem_limit: float = float("inf"),
+    dp_size: int = 1,
+    palette: ShapePalette | None = None,
+    t_max_interval: float = 5e-6,     # paper: sample t_max 5us apart
+    max_group: int = 512,
+    mem_limit_factor: float | None = None,
+) -> list[MicroBatch]:
+    """Optimal contiguous partition of the ordered samples (paper Eq. 2).
+
+    ``mem_limit`` is the per-micro-batch activation budget; with 1F1B it is
+    device_mem/n_stages, adaptive schedules pass their own factor (§4 "Limit
+    memory consumption" / §5).
+    """
+    L = _as2d(ordered_lengths)
+    n = len(L)
+    if n == 0:
+        return []
+    c = n_stages
+    if mem_limit_factor is not None:
+        mem_limit = mem_limit * mem_limit_factor
+
+    # banded tables over groups [i, j): j - i <= max_group
+    if palette is not None:
+        max_group = min(max_group, palette.mbs_buckets[-1])
+    band = min(max_group, n)
+    t_tab = np.full((n, band + 1), np.inf)     # t_tab[i, w] = t(group i..i+w)
+    m_tab = np.full((n, band + 1), np.inf)
+    enc_max = np.zeros((n, band + 1), dtype=np.int64)
+    dec_max = np.zeros((n, band + 1), dtype=np.int64)
+    meta: dict[tuple[int, int], tuple] = {}
+    for i in range(n):
+        emax = dmax = 0
+        for w in range(1, min(band, n - i) + 1):
+            emax = max(emax, int(L[i + w - 1, 0]))
+            dmax = max(dmax, int(L[i + w - 1, 1]))
+            enc_max[i, w], dec_max[i, w] = emax, dmax
+            cnt, seq, tf, tb, mem = _group_cost(cost, w, emax, dmax, palette, 1)
+            if mem > mem_limit and w > 1:
+                break  # larger groups only grow memory
+            t_tab[i, w] = tf + tb
+            m_tab[i, w] = mem
+            meta[(i, w)] = (cnt, seq, tf, tb, mem)
+
+    feasible = t_tab[np.isfinite(t_tab)]
+    if feasible.size == 0:
+        raise ValueError("no feasible micro-batch under the memory limit; "
+                         "even a single sample exceeds it")
+
+    # candidate t_max values: unique group times, subsampled at the interval
+    # (paper: 5us apart). If the interval is coarse relative to the actual
+    # times (tiny models), fall back to a relative grid so the sweep never
+    # collapses to an empty candidate set.
+    interval = min(t_max_interval, max(float(feasible.min()) / 4, 1e-12))
+    cand = np.unique(np.round(feasible / interval) * interval)
+    cand = np.clip(cand, feasible.min(), None)
+    cand = np.unique(np.append(cand, [feasible.min(), feasible.max()]))
+
+    best = None
+    for t_max in cand:
+        # f[j] = min total time to partition first j samples with all groups <= t_max
+        f = np.full(n + 1, np.inf)
+        back = np.full(n + 1, -1, dtype=np.int64)
+        f[0] = 0.0
+        for j in range(1, n + 1):
+            lo = max(0, j - band)
+            widths = j - np.arange(lo, j)          # group widths for start i
+            ti = t_tab[np.arange(lo, j), widths]
+            tot = f[lo:j] + ti
+            tot[ti > t_max + 1e-12] = np.inf
+            k = int(np.argmin(tot))
+            if np.isfinite(tot[k]):
+                f[j] = tot[k]
+                back[j] = lo + k
+        if not np.isfinite(f[n]):
+            continue
+        obj = (c - 1) * t_max + f[n] / dp_size
+        if best is None or obj < best[0] - 1e-15:
+            best = (obj, t_max, f[n], back.copy())
+
+    if best is None:
+        raise ValueError("DP infeasible at every t_max")
+    _, t_max, _, back = best
+
+    # reconstruct
+    cuts = []
+    j = n
+    while j > 0:
+        i = int(back[j])
+        cuts.append((i, j))
+        j = i
+    cuts.reverse()
+    out = []
+    for i, j in cuts:
+        cnt, seq, tf, tb, mem = meta[(i, j - i)]
+        out.append(MicroBatch(list(range(i, j)), j - i, cnt, seq, tf, tb, mem))
+    return out
+
+
+def iteration_time(micro_batches: list[MicroBatch], n_stages: int,
+                   dp_size: int = 1) -> float:
+    """The paper's Eq. 1 estimate for a given split."""
+    if not micro_batches:
+        return 0.0
+    tmax = max(m.t for m in micro_batches)
+    return (n_stages - 1) * tmax + sum(m.t for m in micro_batches) / dp_size
+
+
+# ----------------------------------------------------------------------
+# replica balancing (paper §4 "Balance data parallel model replicas")
+# ----------------------------------------------------------------------
+def karmarkar_karp(values: list[float], k: int) -> list[list[int]]:
+    """Multiway Karmarkar–Karp differencing. Returns k index lists."""
+    if k <= 1:
+        return [list(range(len(values)))]
+    heap = []
+    for idx, v in enumerate(values):
+        sums = [0.0] * k
+        sets: list[list[int]] = [[] for _ in range(k)]
+        sums[0] = v
+        sets[0] = [idx]
+        heap.append((-v, idx, sums, sets))
+    heapq.heapify(heap)
+    tiebreak = len(values)
+    while len(heap) > 1:
+        d1, _, s1, p1 = heapq.heappop(heap)
+        d2, _, s2, p2 = heapq.heappop(heap)
+        # combine: largest of one with smallest of the other
+        order1 = np.argsort(s1)[::-1]
+        order2 = np.argsort(s2)
+        sums = [0.0] * k
+        sets: list[list[int]] = [[] for _ in range(k)]
+        for slot, (a, b) in enumerate(zip(order1, order2)):
+            sums[slot] = s1[a] + s2[b]
+            sets[slot] = p1[a] + p2[b]
+        spread = max(sums) - min(sums)
+        heapq.heappush(heap, (-spread, tiebreak, sums, sets))
+        tiebreak += 1
+    _, _, sums, sets = heap[0]
+    return sets
+
+
+def balance_replicas(
+    micro_batches: list[MicroBatch],
+    dp_size: int,
+    speed_factors: list[float] | None = None,
+) -> list[list[MicroBatch]]:
+    """Partition micro-batches across replicas minimizing max normalized load.
+
+    Uniform speeds -> Karmarkar–Karp (paper). Non-uniform speeds (straggler
+    mitigation, DESIGN §5) -> greedy LPT onto the least *normalized* load,
+    so a replica at speed 0.5 receives ~half the work.
+    """
+    if dp_size <= 1:
+        return [list(micro_batches)]
+    times = [m.t for m in micro_batches]
+    if speed_factors is None or len(set(speed_factors)) <= 1:
+        groups = karmarkar_karp(times, dp_size)
+        return [[micro_batches[i] for i in g] for g in groups]
+    assert len(speed_factors) == dp_size
+    loads = [0.0] * dp_size
+    out: list[list[MicroBatch]] = [[] for _ in range(dp_size)]
+    for i in np.argsort(times)[::-1]:
+        j = int(np.argmin([(loads[r] + times[i]) / speed_factors[r]
+                           for r in range(dp_size)]))
+        out[j].append(micro_batches[int(i)])
+        loads[j] += times[int(i)]
+    return out
+
+
+# ----------------------------------------------------------------------
+# padding accounting (paper Fig. 15)
+# ----------------------------------------------------------------------
+def padding_efficiency(micro_batches: list[MicroBatch], lengths) -> float:
+    L = _as2d(lengths)
+    real = int(L.sum())
+    padded = sum(m.padded_tokens for m in micro_batches)
+    return real / max(padded, 1)

@@ -1,0 +1,187 @@
+"""End-to-end iteration planner (paper §3 "Planners").
+
+One call = one training iteration:
+
+  mini-batch lengths
+    -> order_samples                         (§4)
+    -> dp_split (Eq. 1/2, memory-capped)     (§4)
+    -> balance_replicas (Karmarkar–Karp)     (§4)
+    -> cluster_permute injection order       (§5)
+    -> schedule_adaptive (Alg. 1) or 1F1B    (§5)
+    -> simulate -> build_instructions        (§6)
+    -> ExecutionPlan (+ predicted makespan / memory / padding stats)
+
+Planning is pure CPU work; ``PlannerPool`` overlaps it with execution by
+planning iteration k+1 on worker threads while k runs (paper §3/§8.5), and
+supports elastic re-planning when the replica set changes (dist/fault.py).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import comm_plan, microbatch, packing, schedule as sched
+from repro.core.cost_model import CostModel
+from repro.core.instructions import (ExecutionPlan, InstructionStore,
+                                     MicroBatchSpec, Op, RecomputePolicy)
+from repro.core.recompute import BWD_OVERHEAD, choose_recompute, cost_model_for
+from repro.core.shapes import ShapePalette
+from repro.core.simulator import simulate
+
+
+@dataclass
+class PlannerConfig:
+    n_stages: int
+    dp_size: int = 1
+    device_mem: float = 16e9
+    schedule: str = "adaptive"           # adaptive | 1f1b
+    ordering: str = "sort"               # sort | tsp
+    n_clusters: int = 3
+    palette: Optional[ShapePalette] = None
+    t_max_interval: float = 5e-6
+    comm_latency: float = 0.0
+    d_model: int = 0
+    dynamic_recompute: bool = False
+    speed_factors: Optional[list[float]] = None
+    mem_limit_factor: Optional[float] = None   # per-micro-batch DP cap
+
+
+@dataclass
+class IterationPlan:
+    replica_plans: list[ExecutionPlan]
+    ordering: np.ndarray
+    micro_batches: list[microbatch.MicroBatch]
+    padding_efficiency: float
+    predicted_iteration_time: float
+    planning_seconds: float
+
+
+def _mb_specs(mbs: list[microbatch.MicroBatch], order: np.ndarray,
+              bwd_mult: float = 1.0) -> list[MicroBatchSpec]:
+    out = []
+    for mb_id, m in enumerate(mbs):
+        out.append(MicroBatchSpec(
+            mb_id=mb_id,
+            sample_indices=[int(order[i]) for i in m.indices],
+            mbs=m.mbs, seq=m.seq, t_fwd=m.t_fwd, t_bwd=m.t_bwd * bwd_mult,
+            mem=m.mem))
+    return out
+
+
+def plan_replica(
+    mbs: list[microbatch.MicroBatch],
+    order: np.ndarray,
+    pcfg: PlannerConfig,
+    recompute: RecomputePolicy = RecomputePolicy.FULL,
+) -> ExecutionPlan:
+    """Schedule + comm-plan one replica's micro-batches."""
+    c = pcfg.n_stages
+    specs = _mb_specs(mbs, order)
+    n_micro = len(specs)
+    tf = np.array([[m.t_fwd / c] * c for m in specs])
+    tb = np.array([[m.t_bwd / c] * c for m in specs])
+    am = np.array([[m.mem / c] * c for m in specs])
+
+    if pcfg.schedule == "1f1b":
+        dev_order = sched.schedule_1f1b(n_micro, c)
+        inj = list(range(n_micro))
+    else:
+        lim = pcfg.device_mem  # adaptive schedule enforces the cap itself
+
+        def evaluate(order_ids):
+            o = sched.schedule_adaptive(n_micro, c, am, lim,
+                                        injection_order=list(order_ids))
+            return simulate(o, tf, tb, act_mem=am,
+                            comm_latency=pcfg.comm_latency).makespan
+
+        inj = sched.cluster_permute_order(
+            [m.t_fwd + m.t_bwd for m in specs], pcfg.n_clusters,
+            evaluate=evaluate if n_micro <= 64 else None)
+        dev_order = sched.schedule_adaptive(n_micro, c, am, lim,
+                                            injection_order=inj)
+
+    sim = simulate(dev_order, tf, tb, act_mem=am, comm_latency=pcfg.comm_latency)
+    streams = comm_plan.build_instructions(dev_order, specs, sim,
+                                           d_model=pcfg.d_model)
+    assert not comm_plan.check_order_consistency(streams)
+    return ExecutionPlan(
+        n_stages=c,
+        micro_batches=specs,
+        per_stage=streams,
+        recompute=recompute,
+        predicted_makespan=sim.makespan,
+        predicted_peak_mem=sim.peak_mem,
+        meta={"injection_order": list(map(int, inj))},
+    )
+
+
+def plan_iteration(lengths, cost: CostModel, pcfg: PlannerConfig,
+                   recompute: RecomputePolicy = RecomputePolicy.FULL) -> IterationPlan:
+    t0 = time.perf_counter()
+    order = microbatch.order_samples(lengths, pcfg.ordering)
+    L = microbatch._as2d(lengths)[order]
+    mem_factor = pcfg.mem_limit_factor
+    if mem_factor is None:
+        # 1F1B pins up to c in-flight micro-batches; adaptive enforces its own
+        # cap, so allow bigger micro-batches (paper §4: factors 1/c .. 1).
+        mem_factor = (1.0 / pcfg.n_stages if pcfg.schedule == "1f1b"
+                      else 2.0 / pcfg.n_stages)
+    mbs = microbatch.dp_split(
+        L, cost, pcfg.n_stages,
+        mem_limit=pcfg.device_mem * mem_factor,
+        dp_size=pcfg.dp_size, palette=pcfg.palette,
+        t_max_interval=pcfg.t_max_interval)
+    groups = microbatch.balance_replicas(mbs, pcfg.dp_size, pcfg.speed_factors)
+    plans = [plan_replica(g, order, pcfg, recompute) for g in groups]
+    t_iter = max(p.predicted_makespan for p in plans)
+    return IterationPlan(
+        replica_plans=plans,
+        ordering=order,
+        micro_batches=mbs,
+        padding_efficiency=microbatch.padding_efficiency(mbs, L),
+        predicted_iteration_time=t_iter,
+        planning_seconds=time.perf_counter() - t0,
+    )
+
+
+def plan_iteration_dynamic_recompute(lengths, cfg, pcfg: PlannerConfig):
+    """Paper §7: re-plan under each recompute policy, keep fastest that fits."""
+    def under(policy: RecomputePolicy):
+        cm = cost_model_for(cfg, pcfg.n_stages, policy)
+        it = plan_iteration(lengths, cm, pcfg, recompute=policy)
+        # surface a single ExecutionPlan-like facade for choose_recompute
+        plan = it.replica_plans[0]
+        plan.predicted_makespan = it.predicted_iteration_time
+        plan.meta["iteration_plan"] = it
+        return plan
+    best = choose_recompute(under, pcfg.device_mem)
+    return best.meta["iteration_plan"]
+
+
+class PlannerPool:
+    """Overlaps plan generation with execution (paper §3): a thread pool
+    plans future iterations ahead of the executor and pushes them to the
+    instruction store."""
+
+    def __init__(self, store: InstructionStore, n_workers: int = 4):
+        self.store = store
+        self.pool = cf.ThreadPoolExecutor(max_workers=n_workers)
+        self.futures: dict[int, cf.Future] = {}
+
+    def submit(self, iteration: int, lengths, cost, pcfg: PlannerConfig):
+        def run():
+            it = plan_iteration(lengths, cost, pcfg)
+            # replica 0's plan is fetched by every stage executor of replica 0 etc.
+            self.store.push(iteration, it.replica_plans[0])
+            return it
+        f = self.pool.submit(run)
+        self.futures[iteration] = f
+        return f
+
+    def shutdown(self):
+        self.pool.shutdown(wait=True)

@@ -1,0 +1,79 @@
+"""Micro-batch materialization: sample token streams -> padded JAX arrays.
+
+Rows are padded to the micro-batch's bucketed (mbs, seq) shape; padding
+carries segment_id -1 (masked from attention via the ragged kernel and from
+the loss via loss_weights=0). Labels are next-token shifted within each
+sample; position ids restart at 0 per sample.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.instructions import MicroBatchSpec
+
+
+def materialize_micro_batch(spec: MicroBatchSpec, tokens: list[np.ndarray],
+                            pad_id: int = 0):
+    """tokens: full minibatch sample streams (indexed by spec.sample_indices).
+
+    Returns dict of numpy arrays:
+      tokens, labels (B,S) int32; loss_weights (B,S) f32;
+      positions, segment_ids (B,S) int32.
+    """
+    seq = spec.seq if not isinstance(spec.seq, (tuple, list)) else sum(spec.seq)
+    b = spec.mbs
+    out_tok = np.full((b, seq), pad_id, dtype=np.int32)
+    out_lab = np.zeros((b, seq), dtype=np.int32)
+    out_w = np.zeros((b, seq), dtype=np.float32)
+    out_pos = np.zeros((b, seq), dtype=np.int32)
+    out_seg = np.full((b, seq), -1, dtype=np.int32)
+    for row, sample_idx in enumerate(spec.sample_indices):
+        t = tokens[sample_idx][:seq]
+        n = len(t)
+        out_tok[row, :n] = t
+        if n > 1:
+            out_lab[row, : n - 1] = t[1:]
+            out_w[row, : n - 1] = 1.0
+        out_pos[row, :n] = np.arange(n)
+        out_seg[row, :n] = 0
+    return {
+        "tokens": out_tok,
+        "labels": out_lab,
+        "loss_weights": out_w,
+        "positions": out_pos,
+        "segment_ids": out_seg,
+    }
+
+
+def materialize_packed_rows(rows, tokens: list[np.ndarray], max_len: int,
+                            pad_id: int = 0):
+    """Packing baseline materialization: multiple samples per row, segment
+    ids mark boundaries (cross-contamination is prevented only if the
+    attention implementation honours them — paper §2.2)."""
+    b = len(rows)
+    out_tok = np.full((b, max_len), pad_id, dtype=np.int32)
+    out_lab = np.zeros((b, max_len), dtype=np.int32)
+    out_w = np.zeros((b, max_len), dtype=np.float32)
+    out_pos = np.zeros((b, max_len), dtype=np.int32)
+    out_seg = np.full((b, max_len), -1, dtype=np.int32)
+    for r, row in enumerate(rows):
+        cur = 0
+        for seg, sample_idx in enumerate(row.sample_indices):
+            t = tokens[sample_idx]
+            n = min(len(t), max_len - cur)
+            if n <= 0:
+                break
+            out_tok[r, cur : cur + n] = t[:n]
+            if n > 1:
+                out_lab[r, cur : cur + n - 1] = t[1:n]
+                out_w[r, cur : cur + n - 1] = 1.0
+            out_pos[r, cur : cur + n] = np.arange(n)
+            out_seg[r, cur : cur + n] = seg
+            cur += n
+    return {
+        "tokens": out_tok,
+        "labels": out_lab,
+        "loss_weights": out_w,
+        "positions": out_pos,
+        "segment_ids": out_seg,
+    }

@@ -1,0 +1,170 @@
+"""FlashAttention for TPU in Pallas.
+
+Blockwise attention with online softmax. Grid = (batch*heads, Q blocks,
+KV blocks); the KV-block dimension is innermost and executed sequentially on
+TPU, so fp32 running statistics (m, l, acc) live in VMEM scratch and carry
+across KV steps. Causal / sliding-window block pairs that are fully masked
+are skipped with ``pl.when`` (predicated out — no MXU work issued).
+
+Supports: causal masking, GQA (via head-repetition outside or kv_head mapping
+in the index map), sliding window (gemma2 local layers), attention-logit
+soft-capping (gemma2), and arbitrary Q/KV absolute positions (decode).
+
+BlockSpec tiling (defaults): Q tile (block_q=512, d_head), K/V tiles
+(block_kv=512, d_head) — all multiples of the 128-lane MXU dimension; VMEM
+working set ≈ (block_q + 2·block_kv) · d_head · 2B + block_q·block_kv·4B
+≈ 1.6 MiB at d_head=128, comfortably inside the ~16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    # refs (per BlockSpec tiles)
+    qpos_ref,        # (1, block_q)  int32
+    kpos_ref,        # (1, block_kv) int32
+    q_ref,           # (1, block_q, d)
+    k_ref,           # (1, block_kv, d)
+    v_ref,           # (1, block_kv, d)
+    o_ref,           # (1, block_q, d)
+    # scratch
+    m_ref,           # (block_q,) f32
+    l_ref,           # (block_q,) f32
+    acc_ref,         # (block_q, d) f32
+    *,
+    causal: bool,
+    window: int,
+    softcap: float | None,
+    sm_scale: float,
+    n_kv_blocks: int,
+):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = qpos_ref[0]                       # (block_q,)
+    kpos = kpos_ref[0]                       # (block_kv,)
+
+    # Block-level skip: the whole (q-block, kv-block) pair is masked out when
+    # every kv position is in the causal future of every q position (or all
+    # fall outside the sliding window).
+    q_max = jnp.max(qpos)
+    q_min = jnp.min(qpos)
+    k_min = jnp.min(kpos)
+    k_max = jnp.max(kpos)
+    live = jnp.bool_(True)
+    if causal:
+        live &= q_max >= k_min
+        if window > 0:
+            live &= (q_min - k_max) < window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)      # (bq, d)
+        k = k_ref[0].astype(jnp.float32)      # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                            # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones(s.shape, dtype=bool)
+        dpos = qpos[:, None] - kpos[None, :]
+        if causal:
+            mask &= dpos >= 0
+            if window > 0:
+                mask &= dpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(kv_idx == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                  # (B, T, H, D)
+    k: jax.Array,                  # (B, S, H, D)  (kv heads pre-repeated)
+    v: jax.Array,                  # (B, S, H, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float | None = None,
+    q_positions: jax.Array | None = None,   # (B, T) int32
+    kv_positions: jax.Array | None = None,  # (B, S) int32
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    assert k.shape == (b, s, h, d) and v.shape == (b, s, h, d)
+    block_q = min(block_q, t)
+    block_kv = min(block_kv, s)
+    assert t % block_q == 0 and s % block_kv == 0, (t, s, block_q, block_kv)
+    nq, nk = t // block_q, s // block_kv
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    # layout: fold heads into batch => (B*H, seq, d)
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    qp = jnp.repeat(q_positions, h, axis=0)   # (B*H, T)
+    kp = jnp.repeat(kv_positions, h, axis=0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        sm_scale=1.0 / math.sqrt(d),
+        n_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bh, iq, ik: (bh, iq)),
+            pl.BlockSpec((1, block_kv), lambda bh, iq, ik: (bh, ik)),
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, qr, kr, vr)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,99 @@
+"""Jit'd public wrappers over the Pallas kernels with pure-jnp fallbacks.
+
+``impl`` selects the compute path:
+  - "pallas"     : pl.pallas_call targeting TPU (the production path)
+  - "interpret"  : same kernel body, interpreted on CPU (used by tests)
+  - "ref"        : pure-jnp oracle — used (a) as ground truth, (b) for the
+                   dry-run/roofline lowering, where XLA must see the FLOPs
+                   (custom calls are opaque to cost_analysis), and (c) under
+                   vmap/grad where the kernels don't define batching/VJPs.
+
+The default comes from ``repro.kernels.default_impl()`` which picks "pallas"
+on TPU backends and "ref" elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ragged_attention as _ra
+from repro.kernels import ssd as _ssd
+from repro.kernels import ref as _ref
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: str | None) -> str:
+    return impl if impl is not None else default_impl()
+
+
+def attention(
+    q, k, v, *,
+    causal=True, window=0, softcap=None,
+    q_positions=None, kv_positions=None,
+    q_segment_ids=None, kv_segment_ids=None,
+    block_q=512, block_kv=512, impl: str | None = None,
+    chunk_strategy: str = "q",
+):
+    """Multi-head attention entry point. k/v carry KV heads (GQA repeats here).
+
+    chunk_strategy (ref path, long sequences): "q" scans query blocks
+    (head-parallel attention), "head" scans head blocks (sequence-parallel
+    attention, where the q seq dim is mesh-sharded and must not be scanned).
+    """
+    impl = _resolve(impl)
+    h, kvh = q.shape[2], k.shape[2]
+    ragged = q_segment_ids is not None
+    if impl == "ref":
+        big = q.shape[1] * k.shape[1] * h >= 2048 * 2048 * 8
+        if big and chunk_strategy == "head":
+            fn = _ref.attention_ref_headchunked
+        elif big and q.shape[1] >= 2048:
+            fn = _ref.attention_ref_chunked
+        else:
+            fn = _ref.attention_ref
+        return fn(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+        )
+    interpret = impl == "interpret"
+    kr = _ref._repeat_kv(k, h // kvh)
+    vr = _ref._repeat_kv(v, h // kvh)
+    if ragged:
+        assert window == 0 and softcap is None, "ragged kernel: plain causal only"
+        return _ra.ragged_attention(
+            q, kr, vr, q_segment_ids, kv_segment_ids, causal=causal,
+            q_positions=q_positions, kv_positions=kv_positions,
+            block_q=block_q, block_kv=block_kv, interpret=interpret,
+        )
+    return _fa.flash_attention(
+        q, kr, vr, causal=causal, window=window, softcap=softcap,
+        q_positions=q_positions, kv_positions=kv_positions,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+
+
+def ssd(x, dt, A, B, C, *, initial_state=None, return_state=False,
+        block_t=128, impl: str | None = None):
+    """Mamba2 SSD over a full sequence. Returns y or (y, final_state)."""
+    impl = _resolve(impl)
+    if impl == "ref" or initial_state is not None:
+        # the chunked kernel assumes zero initial state; prefill always does.
+        if initial_state is None and x.shape[1] >= 512:
+            return _ref.ssd_ref_chunked(
+                x, dt, A, B, C, block_t=block_t, return_state=return_state)
+        return _ref.ssd_ref(
+            x, dt, A, B, C, initial_state=initial_state, return_state=return_state
+        )
+    interpret = impl == "interpret"
+    y, st = _ssd.ssd_chunked(x, dt, A, B, C, block_t=block_t, interpret=interpret)
+    return (y, st) if return_state else y
+
+
+def ssd_decode(x, dt, A, B, C, state):
+    """Single-token SSM recurrence (decode): tiny, stays pure-jnp."""
+    return _ref.ssd_decode_ref(x, dt, A, B, C, state)

@@ -1,0 +1,160 @@
+"""Segment-aware (ragged / varlen) FlashAttention for TPU in Pallas.
+
+This is the TPU-native answer to the paper's "packing without
+cross-contamination" problem (DynaPipe §2.2): when a micro-batch row still
+concatenates several samples of unequal length (or carries right-padding),
+per-token *segment ids* mark sample boundaries, and
+
+  1. (q-block, kv-block) pairs whose segment-id ranges are disjoint are
+     skipped entirely — with samples laid out contiguously, segment ids are
+     non-decreasing along the row, so range-disjointness is exact, and the
+     quadratic cross-sample waste of packing never reaches the MXU;
+  2. mixed boundary blocks apply an exact element-wise segment mask;
+  3. padding tokens carry segment id -1 and are masked from both sides.
+
+Same online-softmax structure, scratch carries, and BlockSpec tiling as
+``flash_attention.py`` (see that module for the VMEM budget math).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ragged_kernel(
+    qpos_ref,        # (1, block_q)  int32
+    kpos_ref,        # (1, block_kv) int32
+    qseg_ref,        # (1, block_q)  int32
+    kseg_ref,        # (1, block_kv) int32
+    q_ref,           # (1, block_q, d)
+    k_ref,           # (1, block_kv, d)
+    v_ref,           # (1, block_kv, d)
+    o_ref,           # (1, block_q, d)
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    causal: bool,
+    sm_scale: float,
+    n_kv_blocks: int,
+):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos, kpos = qpos_ref[0], kpos_ref[0]
+    qseg, kseg = qseg_ref[0], kseg_ref[0]
+
+    # Block skipping: segments are laid out contiguously => segment ids are
+    # non-decreasing along the sequence, so two blocks interact iff their
+    # [min, max] segment ranges overlap (and, for causal, kv isn't entirely
+    # in the future). Padding (-1) never matches a valid q segment.
+    q_smin, q_smax = jnp.min(qseg), jnp.max(qseg)
+    k_smin, k_smax = jnp.min(kseg), jnp.max(kseg)
+    live = (q_smax >= k_smin) & (k_smax >= q_smin) & (k_smax >= 0) & (q_smax >= 0)
+    if causal:
+        live &= jnp.max(qpos) >= jnp.min(kpos)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale
+        mask = (qseg[:, None] == kseg[None, :]) & (kseg[None, :] >= 0)
+        if causal:
+            mask &= (qpos[:, None] - kpos[None, :]) >= 0
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        # all-masked rows keep m == NEG_INF; normalize against that
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(kv_idx == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def ragged_attention(
+    q: jax.Array,                  # (B, T, H, D)
+    k: jax.Array,                  # (B, S, H, D)
+    v: jax.Array,                  # (B, S, H, D)
+    q_segment_ids: jax.Array,      # (B, T) int32, -1 = padding
+    kv_segment_ids: jax.Array,     # (B, S) int32
+    *,
+    causal: bool = True,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    block_q = min(block_q, t)
+    block_kv = min(block_kv, s)
+    assert t % block_q == 0 and s % block_kv == 0
+    nq, nk = t // block_q, s // block_kv
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    qp = jnp.repeat(q_positions.astype(jnp.int32), h, axis=0)
+    kp = jnp.repeat(kv_positions.astype(jnp.int32), h, axis=0)
+    qs = jnp.repeat(q_segment_ids.astype(jnp.int32), h, axis=0)
+    ks = jnp.repeat(kv_segment_ids.astype(jnp.int32), h, axis=0)
+
+    kernel = functools.partial(
+        _ragged_kernel,
+        causal=causal,
+        sm_scale=1.0 / math.sqrt(d),
+        n_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bh, iq, ik: (bh, iq)),
+            pl.BlockSpec((1, block_kv), lambda bh, iq, ik: (bh, ik)),
+            pl.BlockSpec((1, block_q), lambda bh, iq, ik: (bh, iq)),
+            pl.BlockSpec((1, block_kv), lambda bh, iq, ik: (bh, ik)),
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, qs, ks, qr, kr, vr)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)

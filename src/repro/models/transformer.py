@@ -1,0 +1,301 @@
+"""Layer stacks: periodic-pattern decoder/encoder + T5-style encoder-decoder.
+
+Big models scan over *periods* (one period = one repetition of
+``cfg.layer_pattern``, e.g. jamba's 8-layer mamba/attn interleave) with
+parameters stacked on a leading ``n_periods`` axis — O(1) HLO size in depth.
+``jax.checkpoint`` on the period body gives per-period remat: the only
+activations saved across the backward pass are the period-boundary residuals
+(which are SP-sharded), everything else is recomputed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import mamba as M
+
+
+# ----------------------------------------------------------------------
+# per-layer block
+# ----------------------------------------------------------------------
+def init_block(key, cfg: ArchConfig, spec: LayerSpec):
+    ks = jax.random.split(key, 3)
+    dt = L._dtype(cfg)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if spec.mixer == "mamba":
+        p["mixer"] = M.init_mamba(ks[0], cfg)
+    else:
+        p["mixer"] = L.init_attention(ks[0], cfg)
+    if spec.moe:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ffn"] = L.init_moe(ks[1], cfg)
+    elif cfg.d_ff:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ffn"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def block_logical(cfg: ArchConfig, spec: LayerSpec):
+    p: dict = {"ln1": (None,)}
+    p["mixer"] = M.mamba_logical(cfg) if spec.mixer == "mamba" else L.attention_logical(cfg)
+    if spec.moe:
+        p["ln2"] = (None,)
+        p["ffn"] = L.moe_logical(cfg)
+    elif cfg.d_ff:
+        p["ln2"] = (None,)
+        p["ffn"] = L.mlp_logical(cfg)
+    return p
+
+
+def block_fwd(p, h, cfg: ArchConfig, spec: LayerSpec, *,
+              positions, segment_ids, cache=None, cache_pos=None,
+              mode="train", impl=None):
+    x = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "mamba":
+        y, new_cache = M.mamba_fwd(p["mixer"], x, cfg, cache=cache, mode=mode, impl=impl)
+    else:
+        y, new_cache = L.attention_fwd(
+            p["mixer"], x, cfg, local=(spec.mixer == "attn_local"),
+            positions=positions, segment_ids=segment_ids,
+            cache=cache, cache_pos=cache_pos, mode=mode, impl=impl,
+        )
+    h = h + y
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        x = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            y, aux = L.moe_fwd(p["ffn"], x, cfg)
+        else:
+            y = L.mlp_fwd(p["ffn"], x, cfg)
+        h = h + y
+    h = shard(h, "dp", "sp", None)
+    return h, new_cache, aux
+
+
+# ----------------------------------------------------------------------
+# cache construction
+# ----------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Per-period-position cache, stacked over periods: tuple of dicts."""
+    caches = []
+    np_ = cfg.n_periods
+    for spec in cfg.layer_pattern:
+        if spec.mixer == "mamba":
+            di, g, n, hh, conv_ch = M._dims(cfg)
+            caches.append({
+                "conv": jnp.zeros((np_, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+                "ssm": jnp.zeros((np_, batch, hh, cfg.ssm_headdim, n), jnp.float32),
+            })
+        else:
+            caches.append({
+                "k": jnp.zeros((np_, batch, seq, cfg.n_kv_heads, cfg.d_head), dtype),
+                "v": jnp.zeros((np_, batch, seq, cfg.n_kv_heads, cfg.d_head), dtype),
+            })
+    return tuple(caches)
+
+
+def cache_logical(cfg: ArchConfig):
+    out = []
+    for spec in cfg.layer_pattern:
+        if spec.mixer == "mamba":
+            out.append({
+                "conv": (None, "dp", None, "tp"),
+                "ssm": (None, "dp", "tp", None, None),
+            })
+        else:
+            # KV cache: batch over dp, seq over the model axis (flash-decode
+            # style sharding; kv heads are usually < 16 so seq is the only
+            # dimension that always divides).
+            out.append({
+                "k": (None, "dp", "sp", None, None),
+                "v": (None, "dp", "sp", None, None),
+            })
+    return tuple(out)
+
+
+# ----------------------------------------------------------------------
+# the stack
+# ----------------------------------------------------------------------
+def init_stack(key, cfg: ArchConfig):
+    """Params stacked over periods: leaf shape (n_periods, *leaf_shape)."""
+    def one_period(k):
+        ks = jax.random.split(k, len(cfg.layer_pattern))
+        return {f"l{i}": init_block(ks[i], cfg, spec)
+                for i, spec in enumerate(cfg.layer_pattern)}
+    keys = jax.random.split(key, cfg.n_periods)
+    periods = [one_period(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+
+
+def stack_logical(cfg: ArchConfig):
+    one = {f"l{i}": block_logical(cfg, spec)
+           for i, spec in enumerate(cfg.layer_pattern)}
+    # prepend the periods axis (never sharded)
+    return jax.tree.map(lambda lg: (None,) + tuple(lg), one,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def _pin_fsdp(pparams, cfg: ArchConfig):
+    """Re-assert FSDP sharding on the per-period weight slice *inside* the
+    scan body, so GSPMD gathers one period at a time in-loop instead of
+    resharding the whole stacked tensor before the loop (which would
+    materialize the full model per device — defeating ZeRO-3)."""
+    from repro.dist.sharding import ambient_mesh, spec_for_zero, zero1_logical
+    mesh = ambient_mesh()
+    if mesh is None or not cfg.fsdp_params:
+        return pparams
+    logical = {f"l{i}": block_logical(cfg, spec)
+               for i, spec in enumerate(cfg.layer_pattern)}
+
+    def leafy(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+
+    from repro.dist.sharding import spec_for
+
+    def pin(w, lg):
+        zlg = zero1_logical(tuple(lg), tuple(w.shape), mesh)
+        w = jax.lax.with_sharding_constraint(
+            w, spec_for_zero(tuple(w.shape), zlg, mesh))
+        # ...then explicitly gather back to the plain-TP layout, so the
+        # reshard is a (small) weight-side all-gather over data — and never
+        # an activation-side gather over model, which GSPMD's propagation
+        # otherwise sometimes picks (observed: full-d_ff hidden gathers).
+        return jax.lax.with_sharding_constraint(
+            w, spec_for(tuple(w.shape), tuple(lg), mesh))
+
+    return jax.tree.map(pin, pparams, logical, is_leaf=leafy)
+
+
+def stack_fwd(params, h, cfg: ArchConfig, *,
+              positions, segment_ids, cache=None, cache_pos=None,
+              mode="train", impl=None, remat=True):
+    """Scan over periods. Returns (h, new_cache, aux_sum)."""
+
+    def period_fn(h, xs):
+        pparams, pcache = xs
+        pparams = _pin_fsdp(pparams, cfg)
+        new_caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.layer_pattern):
+            lc = pcache[i] if pcache is not None else None
+            h, nc, aux = block_fwd(
+                pparams[f"l{i}"], h, cfg, spec,
+                positions=positions, segment_ids=segment_ids,
+                cache=lc, cache_pos=cache_pos, mode=mode, impl=impl,
+            )
+            new_caches.append(nc if nc is not None else jnp.zeros((), jnp.float32))
+            aux_total = aux_total + aux
+        return h, (tuple(new_caches), aux_total)
+
+    if remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "everything": jax.checkpoint_policies.everything_saveable,
+        }[cfg.remat_policy]
+        period_fn = jax.checkpoint(period_fn, policy=policy)
+
+    cache_xs = cache if cache is not None else _none_like_periods(params, cfg)
+    if cfg.unroll_stack:
+        # python-unrolled periods: per-leaf grads keep their tp/zero specs
+        # (a scanned while-carry accumulator collapses them — DESIGN §5)
+        new_caches, auxs = [], []
+        for i in range(cfg.n_periods):
+            xs_i = (jax.tree.map(lambda x: x[i], params),
+                    jax.tree.map(lambda x: x[i], cache_xs))
+            h, (nc, aux) = period_fn(h, xs_i)
+            new_caches.append(nc)
+            auxs.append(aux)
+        new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+                     if cache is not None else None)
+        return h, new_cache, jnp.sum(jnp.stack(auxs))
+
+    xs = (params, cache_xs)
+    h, (new_cache, aux) = jax.lax.scan(period_fn, h, xs)
+    if cache is None:
+        new_cache = None
+    return h, new_cache, jnp.sum(aux)
+
+
+def _none_like_periods(params, cfg):
+    """Placeholder xs when no cache: zeros scanned alongside params."""
+    return tuple(jnp.zeros((cfg.n_periods,), jnp.float32)
+                 for _ in cfg.layer_pattern)
+
+
+# ----------------------------------------------------------------------
+# T5-style encoder-decoder (paper-validation model; runs at reduced scale)
+# ----------------------------------------------------------------------
+def init_encdec(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    dt = L._dtype(cfg)
+    dec_cross = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.fold_in(ks[4], i)
+        dec_cross.append({"ln": jnp.zeros((cfg.d_model,), dt),
+                          "attn": L.init_attention(kk, cfg)})
+    return {
+        "embed": L._init(ks[0], (cfg.vocab_padded, cfg.d_model), 1.0, dt),
+        "enc": init_stack(ks[1], cfg),
+        "dec": init_stack(ks[2], cfg),
+        "cross": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_cross),
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "dec_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def encdec_fwd(params, enc_tokens, dec_tokens, cfg: ArchConfig, *,
+               enc_segments=None, dec_segments=None, impl=None, remat=True):
+    """Returns decoder hidden states (B, T_dec, D)."""
+    b, t_enc = enc_tokens.shape
+    t_dec = dec_tokens.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32)[None], (b, t_enc))
+    dec_pos = jnp.broadcast_to(jnp.arange(t_dec, dtype=jnp.int32)[None], (b, t_dec))
+
+    he = jnp.take(params["embed"], enc_tokens, axis=0)
+    enc_cfg = cfg if not cfg.causal else _replace_causal(cfg, False)
+    he, _, _ = stack_fwd(params["enc"], he, enc_cfg, positions=enc_pos,
+                         segment_ids=enc_segments, impl=impl, remat=remat)
+    he = L.rms_norm(he, params["enc_norm"], cfg.norm_eps)
+
+    hd = jnp.take(params["embed"], dec_tokens, axis=0)
+
+    def dec_period(h, xs):
+        pparams, cross_p = xs
+        for i, spec in enumerate(cfg.layer_pattern):
+            h, _, _ = block_fwd(pparams[f"l{i}"], h, cfg, spec,
+                                positions=dec_pos, segment_ids=dec_segments,
+                                impl=impl)
+        # cross attention after each period (T5 has per-layer cross-attn;
+        # period==1 layer for t5-paper so this is exact)
+        x = L.rms_norm(h, cross_p["ln"], cfg.norm_eps)
+        hh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        b = x.shape[0]
+        q = jnp.einsum("btd,de->bte", x, cross_p["attn"]["wq"]) \
+            .reshape(b, -1, hh, dh)
+        k = jnp.einsum("bsd,de->bse", he, cross_p["attn"]["wk"]) \
+            .reshape(b, -1, kv, dh)
+        v = jnp.einsum("bsd,de->bse", he, cross_p["attn"]["wv"]) \
+            .reshape(b, -1, kv, dh)
+        from repro.kernels import ops
+        o = ops.attention(q, k, v, causal=False, impl=impl)
+        h = h + jnp.einsum("bthk,hkd->btd", o,
+                           cross_p["attn"]["wo"].reshape(hh, dh, cfg.d_model))
+        return h, None
+
+    fn = jax.checkpoint(dec_period) if remat else dec_period
+    hd, _ = jax.lax.scan(fn, hd, (params["dec"], params["cross"]))
+    return L.rms_norm(hd, params["dec_norm"], cfg.norm_eps)
+
+
+def _replace_causal(cfg: ArchConfig, causal: bool) -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, causal=causal)

@@ -1,0 +1,152 @@
+"""Topology-agnostic checkpoint/restore (fault tolerance, DESIGN §5).
+
+Checkpoints store *logical* (fully-gathered) arrays — one ``.npy`` per pytree
+leaf plus a JSON manifest — so a restore can re-shard onto any mesh: restart
+after node failure with a different device count is just ``load(...,
+shardings=new_spec_tree)``. Writes are atomic (tmp dir + rename) and keep a
+rolling window of the last ``keep`` checkpoints.
+
+On a real multi-host cluster each host would write its owned shards and the
+manifest would carry the index (same layout orbax uses); the logical-array
+format here is the single-process equivalent with identical restore
+semantics, which is what the elastic-restart tests exercise.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve ml_dtypes names (bfloat16, float8_*) or numpy names."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """numpy can't serialize ml_dtypes (bf16 saves as void) — store bits."""
+    if arr.dtype.kind in "fiub?":
+        return arr
+    return arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(ckpt_dir: str | Path, step: int, tree, keep: int = 3,
+         extra: Optional[dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f".tmp-{step}-{os.getpid()}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "time": time.time(), "extra": extra or {},
+                "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(tmp / fname, _to_savable(arr))
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    final = ckpt_dir / f"step_{step:08d}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(ckpt_dir.glob("step_*"))
+    if not steps:
+        return None
+    return int(steps[-1].name.split("_")[1])
+
+
+def load(ckpt_dir: str | Path, tree_like, step: Optional[int] = None,
+         shardings=None):
+    """Restore into the structure of ``tree_like``. ``shardings``: optional
+    same-structure tree of jax.sharding.Sharding for elastic re-sharding."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    flat_like, treedef = _flatten(tree_like)
+    flat_sh = None
+    if shardings is not None:
+        flat_sh, _ = _flatten(shardings)
+    leaves = []
+    for key in flat_like:
+        info = manifest["leaves"][key]
+        arr = np.load(d / info["file"])
+        want = _np_dtype(info["dtype"])
+        if arr.dtype != want:
+            arr = arr.view(want)
+        if flat_sh is not None:
+            leaves.append(jax.device_put(arr, flat_sh[key]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    # order of flat_like dict == flatten order
+    return jax.tree.unflatten(treedef, leaves), manifest
+
+
+def restore_or_init(ckpt_dir, init_fn, shardings=None):
+    """Elastic restart helper: restore the latest checkpoint if one exists,
+    else initialize fresh. Returns (state, start_step). A checkpoint that
+    doesn't match the current model (different run left in the directory)
+    falls back to fresh init with a warning rather than crashing."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return init_fn(), 0
+    like = jax.eval_shape(init_fn)
+    try:
+        state, manifest = load(ckpt_dir, like, step, shardings)
+    except (KeyError, ValueError, TypeError) as e:
+        import warnings
+        warnings.warn(f"checkpoint at {ckpt_dir} step {step} is incompatible "
+                      f"with the current model ({e!r}); initializing fresh")
+        return init_fn(), 0
+    # shape check: stale checkpoints from a different config fall back too
+    for a, b in zip(jax.tree.leaves(like), jax.tree.leaves(state)):
+        if tuple(a.shape) != tuple(b.shape):
+            import warnings
+            warnings.warn(f"checkpoint shapes mismatch current model "
+                          f"({a.shape} vs {b.shape}); initializing fresh")
+            return init_fn(), 0
+    return state, manifest["step"]

@@ -1,0 +1,102 @@
+"""AdamW with global-norm clipping, ZeRO-1 sharded states, and optional
+bf16-compressed (error-feedback) gradient reduction. Pure JAX pytrees.
+
+State layout (mixed precision):
+  params      bf16, TP-sharded            (the compute copy)
+  master      fp32, TP+ZeRO(data)-sharded (source of truth)
+  m, v        fp32, TP+ZeRO(data)-sharded
+  err         bf16 error-feedback accumulator (only when compression is on)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False   # bf16 + error feedback on the DP reduce
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    f32 = lambda p: p.astype(jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def compress_for_reduce(grads, state, cfg: AdamWConfig):
+    """bf16 gradient compression with error feedback: the DP all-reduce moves
+    half the bytes; quantization error is carried to the next step."""
+    if not cfg.compress_grads:
+        return grads, state
+    err = state["err"]
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e.astype(jnp.float32), grads, err)
+    compressed = jax.tree.map(lambda g: g.astype(jnp.bfloat16), corrected)
+    new_err = jax.tree.map(
+        lambda c, comp: (c - comp.astype(jnp.float32)).astype(jnp.bfloat16),
+        corrected, compressed)
+    state = dict(state, err=new_err)
+    return compressed, state
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params_bf16, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        new_master = master - cfg.lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master)
+        return m, v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    new_m, new_v, new_master = [], [], []
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+        m2, v2, ma2 = upd(g, m, v, ma)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_master.append(ma2)
+    new_state = dict(
+        state,
+        step=step,
+        m=jax.tree.unflatten(treedef, new_m),
+        v=jax.tree.unflatten(treedef, new_v),
+        master=jax.tree.unflatten(treedef, new_master),
+    )
+    dtype = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.map(lambda ma: ma.astype(dtype), new_state["master"])
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,204 @@
+"""Model <-> executor adapter: stage-sliced params and real JAX fwd/bwd.
+
+Splits a model's scan-over-periods parameter stack into ``n_stages``
+contiguous period groups; stage 0 additionally owns the embedding (+
+modality adapters), the last stage owns the final norm and LM head.
+Backward recomputes the stage forward via ``jax.vjp`` (stage-granular
+activation checkpointing), so the only per-micro-batch stash is the stage
+input — the quantity the planner's memory model charges.
+
+Tied embeddings are duplicated on stages 0 and c-1; their gradients are
+summed at ``collect_grads`` time (the pipeline analogue of Megatron's
+embedding all-reduce).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.executor import StageCallbacks
+from repro.core.instructions import ExecutionPlan
+from repro.models import layers as L
+from repro.models import model as MD
+from repro.models import transformer as T
+
+
+class PipelinedModel:
+    def __init__(self, cfg: ArchConfig, params, n_stages: int,
+                 impl: Optional[str] = None):
+        assert cfg.n_periods % n_stages == 0, (
+            f"{cfg.name}: n_periods {cfg.n_periods} not divisible by "
+            f"{n_stages} stages")
+        self.cfg = cfg
+        self.n_stages = n_stages
+        self.k = cfg.n_periods // n_stages
+        self.impl = impl
+        self.full_params = params
+
+    # ------------------------- param slicing ---------------------------
+    def stage_params(self, j: int):
+        k = self.k
+        stack = jax.tree.map(lambda x: x[j * k : (j + 1) * k],
+                             self.full_params["stack"])
+        p: dict[str, Any] = {"stack": stack}
+        if j == 0:
+            for key in ("embed", "frame_adapter", "mask_emb", "patch_adapter"):
+                if key in self.full_params:
+                    p[key] = self.full_params[key]
+        if j == self.n_stages - 1:
+            p["final_norm"] = self.full_params["final_norm"]
+            if "head" in self.full_params:
+                p["head"] = self.full_params["head"]
+            elif self.cfg.tie_embeddings:
+                p["embed"] = self.full_params["embed"]
+        return p
+
+    def merge_stage_grads(self, stage_grads: list):
+        """Sum per-stage grad trees back into a full-params tree."""
+        k = self.k
+        out = jax.tree.map(jnp.zeros_like, self.full_params)
+        stack_slices = [g["stack"] for g in stage_grads]
+        full_stack = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                  *stack_slices)
+        out = dict(out, stack=full_stack)
+        for j, g in enumerate(stage_grads):
+            for key, val in g.items():
+                if key == "stack":
+                    continue
+                out[key] = out[key] + val if key in out else val
+        return out
+
+    # ------------------------- stage compute ---------------------------
+    def _stage_fn(self, j: int, sparams, x_or_batch, batch_aux):
+        """Pure function: stage forward. Returns h_out or (loss_sum, w_sum)."""
+        cfg = self.cfg
+        positions = batch_aux["positions"]
+        segment_ids = batch_aux["segment_ids"]
+        if j == 0:
+            h = MD.embed_inputs(sparams, x_or_batch, cfg)
+        else:
+            h = x_or_batch
+        import dataclasses
+        sub_cfg = dataclasses.replace(cfg, n_layers=self.k * len(cfg.layer_pattern))
+        h, _, _ = T.stack_fwd(sparams["stack"], h, sub_cfg,
+                              positions=positions, segment_ids=segment_ids,
+                              impl=self.impl, remat=True)
+        if j == self.n_stages - 1:
+            h = L.rms_norm(h, sparams["final_norm"], cfg.norm_eps)
+            head = sparams.get("head", sparams.get("embed"))
+            loss_sum, w_sum = _xent_sum(head, h, batch_aux["labels"],
+                                        batch_aux["loss_weights"], cfg)
+            return loss_sum, w_sum
+        return h
+
+    # ------------------------- callbacks -------------------------------
+    def make_callbacks(self, plan: ExecutionPlan, batches: dict,
+                       on_step=None) -> tuple[list[StageCallbacks], dict]:
+        """batches: mb_id -> batch dict (numpy/JAX arrays).
+
+        Returns (callbacks, result) where result collects
+        {"stage_grads", "loss_sum", "weight_sum"} after run().
+        """
+        c = self.n_stages
+        result = {
+            "stage_grads": [None] * c,
+            "loss_sum": 0.0,
+            "weight_sum": 0.0,
+        }
+        sparams = [self.stage_params(j) for j in range(c)]
+        stashes: list[dict] = [dict() for _ in range(c)]
+
+        def aux_of(mb):
+            b = batches[mb]
+            return {k: b[k] for k in ("positions", "segment_ids", "labels",
+                                      "loss_weights") if k in b}
+
+        def fwd_fn(j):
+            @jax.jit
+            def f(sp, x, aux):
+                return self._stage_fn(j, sp, x, aux)
+            return f
+
+        fwds = [fwd_fn(j) for j in range(c)]
+
+        def make_forward(j):
+            def forward(mb, h_in=None):
+                if j == 0:
+                    x = {k: jnp.asarray(v) for k, v in batches[mb].items()}
+                else:
+                    x = h_in
+                stashes[j][mb] = x
+                out = fwds[j](sparams[j], x, aux_of(mb))
+                if j == c - 1:
+                    stashes[j][mb] = (x, out)
+                    loss_sum, w_sum = out
+                    result["loss_sum"] += float(loss_sum)
+                    result["weight_sum"] += float(w_sum)
+                    return None
+                return out
+            return forward
+
+        def bwd_fn(j):
+            if j == c - 1:
+                @jax.jit
+                def b(sp, x, aux):
+                    def scalar(sp_, x_):
+                        loss_sum, w_sum = self._stage_fn(j, sp_, x_, aux)
+                        return loss_sum
+                    (gp, gx) = jax.grad(scalar, argnums=(0, 1))(sp, x)
+                    return gp, gx
+                return b
+
+            @jax.jit
+            def b(sp, x, g_out, aux):
+                _, vjp = jax.vjp(lambda sp_, x_: self._stage_fn(j, sp_, x_, aux),
+                                 sp, x)
+                gp, gx = vjp(g_out)
+                return gp, gx
+            return b
+
+        bwds = [bwd_fn(j) for j in range(c)]
+
+        def make_backward(j):
+            def backward(mb, g_out):
+                if j == c - 1:
+                    x, _ = stashes[j].pop(mb)
+                    gp, gx = bwds[j](sparams[j], x, aux_of(mb))
+                else:
+                    x = stashes[j].pop(mb)
+                    gp, gx = bwds[j](sparams[j], x, g_out, aux_of(mb))
+                acc = result["stage_grads"][j]
+                result["stage_grads"][j] = gp if acc is None else jax.tree.map(
+                    jnp.add, acc, gp)
+                if j == 0:
+                    return None
+                return gx
+            return backward
+
+        def make_step(j):
+            def step():
+                if on_step is not None and j == 0:
+                    on_step(result)
+            return step
+
+        cbs = [StageCallbacks(make_forward(j), make_backward(j), make_step(j))
+               for j in range(c)]
+        return cbs, result
+
+
+def _xent_sum(head_w, h, labels, weights, cfg: ArchConfig):
+    """Sum (not mean) xent + weight sum — summed across micro-batches, the
+    iteration mean is taken once at optimizer time."""
+    logits = jnp.einsum("btd,vd->btv", h, head_w).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    vocab_ok = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    logits = jnp.where(vocab_ok[None, None, :], logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    w = weights.astype(jnp.float32)
+    return jnp.sum((lse - ll) * w), jnp.sum(w)

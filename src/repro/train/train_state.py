@@ -1,0 +1,68 @@
+"""TrainState pytree + logical sharding trees (DP/TP/SP + ZeRO-1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import spec_for, spec_for_zero, zero1_logical
+from repro.models import model as MD
+from repro.train.optimizer import AdamWConfig, init_opt_state
+
+
+def init_state(key, cfg: ArchConfig, opt_cfg: AdamWConfig):
+    params = MD.init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def state_shapes(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    """ShapeDtypeStruct tree without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, opt_cfg))
+
+
+def _param_spec(cfg: ArchConfig, shape, logical, mesh):
+    """bf16 compute-param spec; ZeRO-3/FSDP upgrade for >=100B archs."""
+    if cfg.fsdp_params:
+        zlg = zero1_logical(tuple(logical), tuple(shape), mesh)
+        return spec_for_zero(tuple(shape), zlg, mesh)
+    return spec_for(tuple(shape), tuple(logical), mesh)
+
+
+def params_spec_tree(cfg: ArchConfig, params_shapes, mesh):
+    logical = MD.params_logical(cfg)
+    return jax.tree.map(
+        lambda sh, lg: _param_spec(cfg, sh.shape, lg, mesh),
+        params_shapes, logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def state_spec_tree(cfg: ArchConfig, st_shapes, mesh):
+    """PartitionSpec tree for the full train state (ZeRO-1 on opt leaves)."""
+    logical = MD.params_logical(cfg)
+
+    def leafy(x):
+        return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+    pspec = jax.tree.map(
+        lambda sh, lg: _param_spec(cfg, sh.shape, lg, mesh),
+        st_shapes["params"], logical, is_leaf=leafy)
+
+    def zspec(sh, lg):
+        zlg = zero1_logical(tuple(lg), tuple(sh.shape), mesh)
+        return spec_for_zero(tuple(sh.shape), zlg, mesh)
+
+    zero = jax.tree.map(lambda sh, lg: zspec(sh, lg), st_shapes["params"],
+                        logical, is_leaf=leafy)
+    opt = {
+        "step": jax.sharding.PartitionSpec(),
+        "master": zero,
+        "m": zero,
+        "v": zero,
+    }
+    if "err" in st_shapes["opt"]:
+        opt["err"] = jax.tree.map(
+            lambda sh, lg: spec_for(tuple(sh.shape), tuple(lg), mesh),
+            st_shapes["params"], logical, is_leaf=leafy)
+    return {"params": pspec, "opt": opt}

@@ -1,0 +1,37 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real single CPU
+device (the 512-device override is exclusively the dry-run's, per the
+assignment). Multi-device sharding tests spawn subprocesses that set their
+own XLA_FLAGS before importing jax."""
+import os
+import sys
+import subprocess
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+@pytest.fixture(scope="session")
+def repo_root() -> Path:
+    return REPO
+
+
+def run_subprocess_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run python code in a subprocess with n host devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

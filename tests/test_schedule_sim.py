@@ -1,0 +1,115 @@
+"""Pipeline schedules (paper §5 / Alg. 1) + simulator properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (cluster_permute_order, schedule_1f1b,
+                                 schedule_adaptive)
+from repro.core.simulator import simulate
+
+
+def test_1f1b_structure():
+    for m, c in [(4, 2), (8, 4), (3, 4)]:
+        order = schedule_1f1b(m, c)
+        assert len(order) == c
+        for dev in order:
+            fs = [i for i, k in dev if k == "F"]
+            bs = [i for i, k in dev if k == "B"]
+            assert fs == list(range(m)) and bs == list(range(m))
+
+
+def test_1f1b_makespan_uniform():
+    """With uniform times, simulated 1F1B makespan equals the textbook
+    (m + c - 1)·(tf + tb) bound (tf = tb/2 case folds into Eq. 1 form)."""
+    m, c, tf, tb = 8, 4, 1.0, 2.0
+    sim = simulate(schedule_1f1b(m, c), tf, tb)
+    expect = (c - 1) * (tf + tb) + m * (tf + tb)
+    assert abs(sim.makespan - expect) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 5), st.data())
+def test_adaptive_memory_invariant(m, c, data):
+    """Alg. 1 never exceeds the device memory limit at any point, for any
+    feasible limit (>= one micro-batch)."""
+    am = np.array([[data.draw(st.floats(0.2, 2.0)) for _ in range(c)]
+                   for _ in range(m)])
+    lim = data.draw(st.floats(float(am.max()), float(am.max()) * 4))
+    order = schedule_adaptive(m, c, am, lim)
+    sim = simulate(order, 1.0, 2.0, act_mem=am)
+    assert max(sim.peak_mem) <= lim + 1e-9
+    for dev in order:
+        assert sorted(i for i, k in dev if k == "F") == list(range(m))
+        assert sorted(i for i, k in dev if k == "B") == list(range(m))
+
+
+def test_adaptive_raises_when_infeasible():
+    am = np.full((3, 2), 10.0)
+    with pytest.raises(RuntimeError):
+        schedule_adaptive(3, 2, am, 5.0)
+
+
+def test_adaptive_higher_safety_stock_than_1f1b():
+    """The paper's core §5 claim: adaptive scheduling holds positive safety
+    stock through the steady state where 1F1B holds zero."""
+    m, c = 12, 4
+    am = np.full((m, c), 1.0)
+    o_1f1b = schedule_1f1b(m, c)
+    o_ad = schedule_adaptive(m, c, am, mem_limit=100.0)
+    s1 = simulate(o_1f1b, 1.0, 2.0, act_mem=am)
+    s2 = simulate(o_ad, 1.0, 2.0, act_mem=am)
+    # interior stages: adaptive keeps at least the 1F1B floor, and more
+    # in total (it front-loads injection)
+    assert sum(s2.safety_stock_min[1:]) >= sum(s1.safety_stock_min[1:])
+    assert max(s2.peak_mem) >= max(s1.peak_mem)  # the documented trade-off
+
+
+def test_adaptive_robust_to_noise():
+    """Fig. 7: under execution-time noise, adaptive degrades no worse than
+    1F1B (averaged over seeds)."""
+    m, c = 16, 8
+    am = np.full((m, c), 1.0)
+    o1 = schedule_1f1b(m, c)
+    oa = schedule_adaptive(m, c, am, mem_limit=1000.0)
+    def avg_makespan(order, noise):
+        return np.mean([simulate(order, 1.0, 2.0, noise_std=noise,
+                                 rng=np.random.default_rng(s)).makespan
+                        for s in range(8)])
+    base1, basea = avg_makespan(o1, 0), avg_makespan(oa, 0)
+    noisy1, noisya = avg_makespan(o1, 0.3), avg_makespan(oa, 0.3)
+    assert (noisya / basea) <= (noisy1 / base1) * 1.05
+
+
+def test_memory_aware_delays_injection():
+    """Fig. 11c: a tight memory limit must lower simulated peak memory."""
+    m, c = 8, 4
+    am = np.full((m, c), 1.0)
+    loose = schedule_adaptive(m, c, am, mem_limit=100.0)
+    tight = schedule_adaptive(m, c, am, mem_limit=3.0)
+    s_loose = simulate(loose, 1.0, 2.0, act_mem=am)
+    s_tight = simulate(tight, 1.0, 2.0, act_mem=am)
+    assert max(s_tight.peak_mem) <= 3.0 + 1e-9
+    assert max(s_tight.peak_mem) <= max(s_loose.peak_mem)
+
+
+def test_cluster_permute_improves_or_equals():
+    times = [5.0, 1.0, 5.0, 1.0, 5.0, 1.0, 1.0, 1.0]
+    m, c = len(times), 4
+    am = np.full((m, c), 1.0)
+    tf = np.array([[t / 3] * c for t in times])
+    tb = 2 * tf
+
+    def evaluate(order_ids):
+        o = schedule_adaptive(m, c, am, 100.0, injection_order=list(order_ids))
+        return simulate(o, tf, tb, act_mem=am).makespan
+
+    best = cluster_permute_order(times, 3, evaluate)
+    assert evaluate(best) <= evaluate(list(range(m))) + 1e-9
+
+
+def test_simulator_deadlock_detection():
+    # device 1 waits for mb1 forward before mb0 exists anywhere: fine order,
+    # but a backward-before-forward order must deadlock.
+    order = [[(0, "B"), (0, "F")], [(0, "F"), (0, "B")]]
+    with pytest.raises(RuntimeError):
+        simulate(order, 1.0, 2.0)
