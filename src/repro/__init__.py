@@ -1,0 +1,19 @@
+"""DynaPipe reproduction: dynamic micro-batching + adaptive pipelines on JAX.
+
+Package layout (see docs/architecture.md for the data-flow walkthrough):
+
+- ``repro.core``    — pure-CPU planning: micro-batch construction, cost
+                      models, schedules, instruction streams, comm planning.
+- ``repro.dist``    — the distributed execution substrate: logical-axis
+                      sharding, compiled pipeline execution, fault tolerance.
+- ``repro.models``  — pure-JAX model zoo (transformer / mamba / MoE stacks).
+- ``repro.train``   — optimizer, train state, checkpointing, pipeline
+                      adapter, planner-driven training loop.
+- ``repro.launch``  — mesh factories and the multi-pod compile dry-run.
+- ``repro.kernels`` — Pallas kernels + jnp reference implementations.
+
+Importing ``repro`` installs the JAX forward-compat shims (see
+``repro._jax_compat``) so the unified post-0.6 sharding API used throughout
+the codebase also runs on older jax runtimes.
+"""
+from repro import _jax_compat  # noqa: F401  (imported for its side effects)

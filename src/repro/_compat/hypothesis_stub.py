@@ -1,0 +1,160 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test suite uses hypothesis for light property-based coverage
+(``@given`` over integers/floats/lists and interactive ``st.data()``
+draws). Real hypothesis is declared in ``pyproject.toml`` and used when
+present — ``tests/conftest.py`` only registers this stub as the
+``hypothesis`` module when the import fails, so hermetic environments can
+still run the full tier-1 suite.
+
+Semantics implemented: each ``@given`` test runs ``max_examples`` times
+(from ``@settings``, default 20) over a deterministic per-test RNG, always
+starting with the strategies' boundary values so edge cases are covered.
+No shrinking, no example database.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)   # values tried on the first runs
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value=None, max_value=None):
+    lo = -(2 ** 16) if min_value is None else int(min_value)
+    hi = 2 ** 16 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi), boundary=(lo, hi))
+
+
+def _floats(min_value=None, max_value=None, allow_nan=False,
+            allow_infinity=False, width=64):
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+    return _Strategy(lambda rng: rng.uniform(lo, hi), boundary=(lo, hi))
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)),
+                     boundary=(False, True))
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq),
+                     boundary=tuple(seq[:2]))
+
+
+def _just(value):
+    return _Strategy(lambda rng: value, boundary=(value,))
+
+
+def _lists(elements: _Strategy, min_size=0, max_size=None):
+    hi = (min_size + 10) if max_size is None else max_size
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return [elements.example(rng) for _ in range(n)]
+
+    def smallest(rng):
+        return [elements.example(rng) for _ in range(min_size)]
+
+    def largest(rng):
+        return [elements.example(rng) for _ in range(hi)]
+
+    # boundary entries are callables re-drawn per run (sizes fixed, contents random)
+    return _Strategy(draw, boundary=(smallest, largest))
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+class _DataObject:
+    """Interactive draws for ``st.data()`` tests."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.example(self._rng)
+
+
+def _data():
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
+def _materialize(value, rng):
+    return value(rng) if callable(value) else value
+
+
+def given(*strategies, **named):
+    if named:
+        raise NotImplementedError("stub supports positional strategies only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            rng = random.Random(fn.__name__)
+            n_boundary = max((len(s.boundary) for s in strategies), default=0)
+            for i in range(max(n, n_boundary)):
+                vals = []
+                for s in strategies:
+                    if i < len(s.boundary):
+                        vals.append(_materialize(s.boundary[i], rng))
+                    else:
+                        vals.append(s.example(rng))
+                fn(*args, *vals, **kwargs)
+
+        # hide the strategy-filled parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    def decorate(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> types.ModuleType:
+    """Register the stub as ``hypothesis`` in ``sys.modules`` (no-op if the
+    real package is importable). Returns the active ``hypothesis`` module."""
+    try:
+        import hypothesis  # noqa: F401
+        return sys.modules["hypothesis"]
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.floats = _floats
+    st.booleans = _booleans
+    st.lists = _lists
+    st.tuples = _tuples
+    st.sampled_from = _sampled_from
+    st.just = _just
+    st.data = _data
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return mod

@@ -1,0 +1,121 @@
+"""Forward-compatibility shims for older JAX runtimes.
+
+The codebase (and its tests) program against the post-0.6 unified sharding
+API: ``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``jax.set_mesh`` as a context manager, and ``jax.shard_map`` with the
+``check_vma`` keyword. On runtimes where those names already exist this
+module is a no-op; on older runtimes (e.g. jax 0.4.x, which this container
+ships) it installs equivalent shims so the same source runs unmodified:
+
+- ``jax.sharding.AxisType``: a stand-in enum (all axes behave as ``Auto`` —
+  exactly the GSPMD semantics the old runtime implements).
+- ``jax.make_mesh``: accepts and ignores ``axis_types``.
+- ``jax.set_mesh(mesh)``: context manager that enters the legacy ``Mesh``
+  resource context *and* records the mesh in a thread-local that
+  :func:`repro.dist.sharding.ambient_mesh` reads.
+- ``jax.shard_map``: wraps ``jax.experimental.shard_map.shard_map``,
+  translating ``check_vma`` to the old ``check_rep``.
+
+Imported for its side effects by ``repro/__init__.py``; safe to import more
+than once and from multiple threads (attribute writes are idempotent).
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+import threading
+
+import jax
+
+_tls = threading.local()
+
+
+def current_set_mesh():
+    """The mesh most recently entered via ``jax.set_mesh`` (shimmed or not).
+
+    Returns None outside any ``set_mesh`` context. Used by
+    ``repro.dist.sharding.ambient_mesh`` as the primary ambient-mesh source.
+    """
+    return getattr(_tls, "mesh", None)
+
+
+def _record(mesh):
+    prev = getattr(_tls, "mesh", None)
+    _tls.mesh = mesh
+    return prev
+
+
+@contextlib.contextmanager
+def _recording_set_mesh(mesh, inner=None):
+    prev = _record(mesh)
+    try:
+        if inner is not None:
+            with inner:
+                yield mesh
+        else:
+            yield mesh
+    finally:
+        _tls.mesh = prev
+
+
+def install() -> None:
+    if not hasattr(jax.tree, "flatten_with_path"):
+        jax.tree.flatten_with_path = jax.tree_util.tree_flatten_with_path
+    if not hasattr(jax.tree, "map_with_path"):
+        jax.tree.map_with_path = jax.tree_util.tree_map_with_path
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            del axis_types  # old runtime: every axis is Auto
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if hasattr(jax, "set_mesh"):
+        # Wrap so current_set_mesh() keeps working on new runtimes too.
+        _orig_set_mesh = jax.set_mesh
+        if not getattr(_orig_set_mesh, "_repro_recording", False):
+            def set_mesh(mesh):
+                return _recording_set_mesh(mesh, inner=_orig_set_mesh(mesh))
+
+            set_mesh._repro_recording = True
+            jax.set_mesh = set_mesh
+    else:
+        def set_mesh(mesh):
+            # Entering the legacy Mesh context keeps PartitionSpec-based
+            # with_sharding_constraint working inside the block.
+            return _recording_set_mesh(mesh, inner=mesh)
+
+        set_mesh._repro_recording = True
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, check_rep=None, **kwargs):
+            check = check_vma if check_vma is not None else check_rep
+            kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+            if check is not None:
+                kw["check_rep"] = check
+            if f is None:
+                return lambda g: _shard_map(g, **kw)
+            return _shard_map(f, **kw)
+
+        jax.shard_map = shard_map
+
+
+install()

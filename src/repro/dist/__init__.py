@@ -1,0 +1,14 @@
+"""``repro.dist`` — the distributed execution substrate.
+
+Everything above this package plans in *logical* terms (micro-batches,
+instruction streams, logical sharding dims); everything below it is JAX
+meshes and collectives. Three modules:
+
+- :mod:`repro.dist.sharding` — logical-axis sharding (``shard``,
+  ``spec_for``, ZeRO layouts, ``pure_dp``) over ``jax.sharding.Mesh``.
+- :mod:`repro.dist.pipeline` — pipeline execution: the compiled
+  ``shard_map``+``ppermute`` device plane and the threaded host plane.
+- :mod:`repro.dist.fault` — heartbeat/straggler monitoring and elastic
+  re-planning over the surviving replica set.
+"""
+from repro.dist import fault, pipeline, sharding  # noqa: F401

@@ -1,0 +1,164 @@
+"""Compiled pipeline-parallel execution over a device mesh (paper §5–§6).
+
+Two execution planes implement the same instruction semantics:
+
+- **Host plane** (``core/executor.py``): one Python thread per stage
+  interprets an :class:`~repro.core.instructions.ExecutionPlan` against
+  rendezvous channels — supports *ragged* micro-batches (every micro-batch
+  its own padded shape), which is DynaPipe's whole point. Use
+  :func:`execute_plan` / the training loop for that.
+- **Device plane** (this module's :func:`pipelined_apply`): when one
+  iteration's micro-batches share a shape (the ShapePalette buckets them),
+  the pipeline compiles to a single ``shard_map`` program whose stages talk
+  through ``lax.ppermute`` — XLA's collective-permute, i.e. real P2P
+  send/recv on the interconnect. The *order* in which micro-batches enter
+  the ring is taken from the plan's per-stage instruction stream, so the
+  deadlock-free ordering computed by ``core/comm_plan.py`` is what the
+  compiled collective sequence executes.
+
+``pipelined_apply`` is a GPipe-style shift register: with ``S`` stages and
+``M`` micro-batches it runs ``M + S - 1`` ticks; at tick ``t`` stage ``s``
+holds micro-batch ``t - s``, computes, and ppermutes its output to stage
+``s + 1``. Stage ``s`` owns ``stage_params[s]`` (the leading axis of every
+param leaf is the stage axis and is sharded over the mesh's first axis).
+Warm-up/drain ticks compute on don't-care values that never reach a valid
+output slot.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.executor import PipelineExecutor, StageCallbacks
+from repro.core.instructions import ExecutionPlan, Op
+
+
+def injection_order(plan: ExecutionPlan) -> list[int]:
+    """Micro-batch ids in the order stage 0 launches forwards — the ring
+    entry order the §6 comm plan proved deadlock-free."""
+    return [ins.micro_batch for ins in plan.per_stage[0]
+            if ins.op is Op.FORWARD]
+
+
+def _sequential(stage_fn, stage_params, xs, n_stages):
+    """1-device fallback: same math, no collectives."""
+    h = xs
+    for s in range(n_stages):
+        w = jax.tree.map(lambda a: a[s], stage_params)
+        h = jax.vmap(lambda hb: stage_fn(w, hb, s))(h)
+    return h
+
+
+def pipelined_apply(
+    stage_fn: Callable,
+    stage_params,
+    inputs: jax.Array,
+    *,
+    mesh: Optional[Mesh] = None,
+    n_stages: Optional[int] = None,
+    plan: Optional[ExecutionPlan] = None,
+) -> jax.Array:
+    """Run ``inputs`` through ``n_stages`` pipeline stages on ``mesh``.
+
+    Args:
+      stage_fn: ``stage_fn(stage_weights, h, stage) -> h_out`` — pure,
+        shape/dtype-preserving per-stage transform. ``stage`` is a traced
+        scalar stage index.
+      stage_params: pytree whose leaves carry a leading ``n_stages`` axis
+        (stage ``s`` computes with leaf ``[s]``).
+      inputs: ``(n_micro, micro_batch, ...)`` stack of equal-shape
+        micro-batches (bucket ragged ones with the ShapePalette first; truly
+        ragged streams run on the host plane via :func:`execute_plan`).
+      mesh: mesh whose *first* axis is the stage axis. ``None`` or a size-1
+        stage axis selects the sequential fallback.
+      n_stages: defaults to the stage-axis size (or the params' leading dim
+        in fallback mode).
+      plan: optional :class:`ExecutionPlan`; its stage-0 instruction stream
+        fixes the order micro-batches enter the ring. Results are returned
+        in the original micro-batch order regardless.
+
+    Returns an array shaped like ``inputs``: micro-batch ``i`` fully
+    transformed by stages ``0..n_stages-1`` in sequence.
+    """
+    axis = mesh.axis_names[0] if mesh is not None else None
+    if n_stages is None:
+        n_stages = (mesh.shape[axis] if mesh is not None
+                    else jax.tree.leaves(stage_params)[0].shape[0])
+    n_micro = inputs.shape[0]
+
+    order = None
+    if plan is not None:
+        if plan.n_stages != n_stages:
+            raise ValueError(f"plan has {plan.n_stages} stages, mesh/params "
+                             f"give {n_stages}")
+        order = np.asarray(injection_order(plan))
+        if sorted(order.tolist()) != list(range(n_micro)):
+            raise ValueError("plan injection order does not cover inputs")
+        inputs = inputs[order]
+
+    if mesh is None or mesh.shape[axis] <= 1:
+        out = _sequential(stage_fn, stage_params, inputs, n_stages)
+    else:
+        if mesh.shape[axis] != n_stages:
+            raise ValueError(
+                f"stage axis {axis!r} has size {mesh.shape[axis]}, expected "
+                f"n_stages={n_stages}")
+        out = _pipelined_shardmap(stage_fn, stage_params, inputs, mesh, axis,
+                                  n_stages)
+    if order is not None:
+        out = out[np.argsort(order)]
+    return out
+
+
+def _pipelined_shardmap(stage_fn, stage_params, xs, mesh, axis, n_stages):
+    n_micro = xs.shape[0]
+    fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def local_fn(w_local, xs_full):
+        # w_local: this stage's slice (leading axis length 1); xs replicated
+        w = jax.tree.map(lambda a: a[0], w_local)
+        stage = jax.lax.axis_index(axis)
+        last = n_stages - 1
+
+        def tick(t, carry):
+            buf, outs = carry
+            x0 = jax.lax.dynamic_index_in_dim(
+                xs_full, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            h_in = jnp.where(stage == 0, x0, buf)
+            h = stage_fn(w, h_in, stage)
+            # the value at the last stage at tick t is micro-batch t - last
+            mb = t - last
+            idx = jnp.clip(mb, 0, n_micro - 1)
+            cur = jax.lax.dynamic_index_in_dim(outs, idx, 0, keepdims=False)
+            new = jnp.where((stage == last) & (mb >= 0), h, cur)
+            outs = jax.lax.dynamic_update_index_in_dim(outs, new, idx, 0)
+            # P2P hand-off to the next stage (last stage's send is dropped;
+            # stage 0 receives zeros it never reads)
+            buf = jax.lax.ppermute(h, axis, perm=fwd)
+            return buf, outs
+
+        buf0 = jnp.zeros_like(xs_full[0])
+        outs0 = jnp.zeros_like(xs_full)
+        _, outs = jax.lax.fori_loop(0, n_micro + n_stages - 1, tick,
+                                    (buf0, outs0))
+        # only the last stage wrote real values; psum replicates them
+        return jax.lax.psum(outs, axis)
+
+    in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
+    # jax.shard_map: native on new runtimes, _jax_compat shim on 0.4.x
+    run = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                        check_vma=False)
+    return run(stage_params, xs)
+
+
+def execute_plan(plan: ExecutionPlan, callbacks: list[StageCallbacks],
+                 timeout: float = 60.0) -> None:
+    """Host-plane entry point: interpret a (possibly ragged) ExecutionPlan
+    with the threaded stage executor. Thin alias over
+    :class:`~repro.core.executor.PipelineExecutor` so ``repro.dist`` exposes
+    both execution planes."""
+    PipelineExecutor(plan, callbacks, timeout=timeout).run()

@@ -320,6 +320,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         ma = compiled.memory_analysis()
+        # older jaxlib has no peak stat; estimate the upper bound as
+        # args+outputs+temps minus aliased (donated) bytes, which would
+        # otherwise be double-counted on both the argument and output side
+        peak_bytes = getattr(
+            ma, "peak_memory_in_bytes",
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
         ca = compiled.cost_analysis()
         if isinstance(ca, (list, tuple)):
             ca = ca[0]
@@ -351,7 +358,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "argument_bytes": ma.argument_size_in_bytes,
             "output_bytes": ma.output_size_in_bytes,
             "temp_bytes": ma.temp_size_in_bytes,
-            "peak_bytes": ma.peak_memory_in_bytes,
+            "peak_bytes": peak_bytes,
             "alias_bytes": ma.alias_size_in_bytes,
             "cpu_bf16_upcast_bytes": upcast,
             "temp_tpu_est_bytes": temp_tpu_est,

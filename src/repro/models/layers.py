@@ -1,9 +1,13 @@
 """Composable pure-JAX layers: norms, RoPE, GQA attention, MLP, MoE.
 
 Parameters are plain nested dicts; every ``init_*`` has a matching
-``*_logical`` returning the same-structured tree of *logical* sharding dims
-(see ``repro.dist.sharding``). Activations are annotated in-line with
-``shard(...)`` so GSPMD propagates DP/TP/SP placements.
+``*_logical`` returning the same-structured tree of *logical* sharding dim
+tuples — entries from {"dp", "tp", "sp", "ep", None} that
+``repro.dist.sharding.spec_for`` (and ``spec_for_zero`` for ZeRO layouts)
+resolves against the ambient mesh, dropping any dim the mesh axis does not
+divide. Activations are annotated in-line with
+``repro.dist.sharding.shard(x, *logical_dims)`` — a no-op without a mesh —
+so GSPMD propagates DP/TP/SP placements from those anchors.
 
 dtype policy: params bf16 (cfg.dtype), math that needs it (softmax, norms,
 SSM recurrences, loss) in fp32.

@@ -14,6 +14,7 @@ straggler speed factors feed the next iteration's replica balancing.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -29,6 +30,7 @@ from repro.core.instructions import InstructionStore
 from repro.core.planner import PlannerConfig, PlannerPool, plan_iteration
 from repro.data.dataset import materialize_micro_batch
 from repro.data.synthetic import MultiTaskDataset
+from repro.dist.fault import StragglerMonitor
 from repro.models import model as MD
 from repro.train import checkpoint as CKPT
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -48,8 +50,19 @@ class LoopConfig:
 
 def train(cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
           lcfg: LoopConfig, opt_cfg: AdamWConfig = AdamWConfig(lr=3e-4),
-          dataset: Optional[MultiTaskDataset] = None):
-    """Returns (params, history)."""
+          dataset: Optional[MultiTaskDataset] = None,
+          monitor: Optional[StragglerMonitor] = None):
+    """Returns (params, history).
+
+    ``monitor`` (``n_replicas == pcfg.dp_size``) opts into straggler-aware
+    planning. The monitor is an in-process registry: this loop heartbeats
+    replica 0 with its measured iteration time, and the *caller* is
+    responsible for feeding peer replicas' heartbeats into the same object
+    (e.g. a control thread draining peer telemetry). Each iteration is then
+    planned with the monitor's current speed factors so
+    ``balance_replicas`` sheds work off slow replicas; with no peer
+    heartbeats the factors stay uniform and planning is unchanged.
+    """
     ds = dataset or MultiTaskDataset(n_tasks=16, max_len=pcfg.palette.seq_buckets[-1]
                                      if pcfg.palette else 512,
                                      seed=lcfg.seed)
@@ -77,9 +90,15 @@ def train(cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
             max(2, lcfg.global_tokens // 256), cfg.vocab)
         # enforce token budget approximately
         pending[it] = (lengths, tokens)
+        p = pcfg
+        if monitor is not None and pcfg.dp_size > 1:
+            # pad/truncate to dp_size (balance_replicas requires the match)
+            sf = monitor.speed_factors()
+            sf = (sf + [1.0] * pcfg.dp_size)[:pcfg.dp_size]
+            p = dataclasses.replace(pcfg, speed_factors=sf)
         futures[it] = pool.submit(
             it, lengths[:, 0] if not np.any(lengths[:, 1]) else lengths,
-            cost, pcfg)
+            cost, p)
 
     sample_and_submit(start)
 
@@ -123,6 +142,8 @@ def train(cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
         grads = jax.tree.map(lambda g: g * scale, grads)
         params, opt, om = adamw_update(params, grads, opt, opt_cfg)
         dt = time.perf_counter() - t0
+        if monitor is not None:
+            monitor.heartbeat(0, iter_time=dt)
         loss = loss_sum / max(w_sum, 1.0)
         history.append({"iter": it, "loss": loss, "time_s": dt,
                         "n_micro": len(plan.micro_batches),

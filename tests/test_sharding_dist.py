@@ -17,6 +17,29 @@ def test_zero1_logical_no_mesh():
     assert zero1_logical((None, "tp"), (64, 64)) == (None, "tp")
 
 
+def test_pure_dp_spec_roundtrip_one_device_mesh():
+    """The fallback path launch/dryrun.py uses for pure-DP cells: on a
+    1-device mesh every spec must collapse to fully-replicated, constraints
+    must be identity, and values must round-trip through them unchanged."""
+    import jax
+    import jax.numpy as jnp
+    from repro.dist.sharding import ambient_mesh, axis_size, pure_dp, shard
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = np.arange(32, dtype=np.float32).reshape(4, 8)
+    with jax.set_mesh(mesh), pure_dp(True):
+        assert ambient_mesh() is mesh
+        assert axis_size("dp") == 1 and axis_size("tp") == 1
+        # dp resolves to the whole (trivial) mesh; tp resolves to nothing
+        assert spec_for((4, 8), ("dp", "tp")) == P()
+        zlg = zero1_logical((None, "tp"), (64, 64), mesh)
+        assert spec_for_zero((64, 64), zlg, mesh) == P()
+        y = jax.jit(lambda a: shard(jnp.asarray(a), "dp", "tp") * 1.0)(x)
+    np.testing.assert_array_equal(np.asarray(y), x)
+    assert ambient_mesh() is None
+
+
 @pytest.mark.slow
 def test_sharded_loss_equals_unsharded():
     """jit'd loss under a (2,4) mesh == single-device loss (GSPMD math)."""
