@@ -1,18 +1,121 @@
-"""Paper Fig. 17: execution-planning time vs global batch size, and the
-planning-time : iteration-time ratio that determines how many CPU cores are
-needed for full overlap (paper finds <= 13)."""
+"""Planning-throughput benchmarks.
+
+Two sections:
+
+1. ``dp_split`` fast path vs ``dp_split_reference`` at the ISSUE-2 anchor
+   size (n=2048 samples, band=512), palette off and on. Asserts bit-identical
+   Eq. 1 objectives and cuts, and writes machine-readable records to
+   ``BENCH_planning.json`` at the repo root so the perf trajectory is
+   tracked across PRs.
+2. Paper Fig. 17: end-to-end execution-planning time vs global batch size,
+   and the planning:iteration ratio that determines how many CPU cores are
+   needed for full overlap (paper finds <= 13).
+
+``--smoke`` shrinks section 1 (n=256, band=64, written to
+``BENCH_planning_smoke.json``) and skips section 2 — used by CI to keep the
+comparison exercised without minutes of reference DP. ``benchmarks/run.py``
+uses the ``quick`` mode (small-n section 1 + Fig. 17) for the same reason;
+only a direct full invocation rewrites the tracked ``BENCH_planning.json``.
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
 
 import numpy as np
 
 from benchmarks.common import emit, flan_like_lengths, timed
 from repro.configs.base import get_arch
 from repro.core.cost_model import AnalyticCostModel
+from repro.core.microbatch import (dp_split, dp_split_reference,
+                                   group_cost_lut, iteration_time)
 from repro.core.planner import PlannerConfig, plan_iteration
 from repro.core.shapes import ShapePalette
 
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BENCH_JSON = REPO_ROOT / "BENCH_planning.json"
+# smoke runs (CI) write elsewhere so they never clobber the tracked
+# full-size record
+BENCH_JSON_SMOKE = REPO_ROOT / "BENCH_planning_smoke.json"
 
-def main():
+
+def _dp_lengths(n: int, max_len: int = 2048) -> np.ndarray:
+    lengths = flan_like_lengths(4000 * max(n, 64), max_len, seed=0)[0][:, 0]
+    if len(lengths) < n:
+        reps = -(-n // len(lengths))
+        lengths = np.tile(lengths, reps)
+    return np.sort(lengths[:n])
+
+
+def bench_dp_fast_vs_reference(n: int, band: int, use_palette: bool,
+                               n_stages: int = 4) -> dict:
+    cfg = get_arch("gpt-paper")
+    pal = (ShapePalette.build(min_seq=128, max_seq=2048, max_mbs=band)
+           if use_palette else None)
+    L = _dp_lengths(n)
+    cm = AnalyticCostModel(cfg, n_stages=n_stages)   # fresh model => cold LUT
+    kw = dict(palette=pal, max_group=band)
+
+    t0 = time.perf_counter()
+    fast = dp_split(L, cm, n_stages, **kw)
+    fast_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dp_split(L, cm, n_stages, **kw)
+    fast_warm_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ref = dp_split_reference(L, cm, n_stages, **kw)
+    reference_s = time.perf_counter() - t0
+
+    obj_fast = iteration_time(fast, n_stages)
+    obj_ref = iteration_time(ref, n_stages)
+    identical = (obj_fast == obj_ref
+                 and [m.indices for m in fast] == [m.indices for m in ref])
+    assert identical, (f"fast/reference diverged at n={n} band={band} "
+                       f"palette={use_palette}: {obj_fast} vs {obj_ref}")
+    lut = group_cost_lut(cm)
+    rec = {
+        "n": n,
+        "band": band,
+        "palette": use_palette,
+        "n_stages": n_stages,
+        "reference_s": round(reference_s, 4),
+        "fast_s": round(fast_cold_s, 4),
+        "fast_warm_s": round(fast_warm_s, 4),
+        "speedup": round(reference_s / fast_cold_s, 2),
+        "speedup_warm": round(reference_s / fast_warm_s, 2),
+        "objective_identical": identical,
+        "n_micro_batches": len(fast),
+        "lut_entries": len(lut),
+    }
+    emit(f"dp_split_n{n}_band{band}_pal{int(use_palette)}", fast_cold_s * 1e6,
+         f"reference_s={reference_s:.3f};fast_s={fast_cold_s:.3f};"
+         f"speedup={rec['speedup']:.1f}x;warm_speedup={rec['speedup_warm']:.1f}x;"
+         f"identical={identical}")
+    return rec
+
+
+def main(smoke: bool = False, quick: bool = False):
+    """``smoke``: small-n dp comparison only (CI). ``quick``: small-n dp
+    comparison + Fig. 17 — used by benchmarks/run.py so the aggregate runner
+    never stalls on the ~47-minute full-size reference DP. Default (both
+    False): the full n=2048/band=512 anchor, written to BENCH_planning.json.
+    """
+    if smoke or quick:
+        scenarios = [(256, 64, False), (256, 64, True)]
+    else:
+        scenarios = [(2048, 512, False), (2048, 512, True)]
+    records = [bench_dp_fast_vs_reference(n, band, pal)
+               for n, band, pal in scenarios]
+    out_path = BENCH_JSON if not (smoke or quick) else BENCH_JSON_SMOKE
+    out_path.write_text(json.dumps(records, indent=2) + "\n")
+    print(f"wrote {out_path}", flush=True)
+    if smoke:
+        return
+
+    # ---- paper Fig. 17: full plan_iteration scaling --------------------
     cfg = get_arch("gpt-paper")
     c = 4
     cost = AnalyticCostModel(cfg, n_stages=c)
@@ -30,4 +133,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-n CI variant (writes BENCH_planning_smoke.json; "
+                         "the tracked BENCH_planning.json is full runs only)")
+    main(**vars(ap.parse_args()))

@@ -1,8 +1,12 @@
 """Benchmark runner: one section per paper table/figure (deliverable d).
 
-Prints ``name,us_per_call,derived`` CSV rows. Roofline terms are derived
-from the compiled dry-run artifacts when experiments/dryrun is populated
-(run ``python -m repro.launch.dryrun --all`` first for that section).
+Prints ``name,us_per_call,derived`` CSV rows. The planning section runs the
+small-n fast-vs-reference dp_split comparison (full-size numbers take ~47
+minutes of reference DP — regenerate the tracked ``BENCH_planning.json``
+with a direct ``python -m benchmarks.bench_planning`` run). Roofline terms
+are derived from the compiled dry-run artifacts when experiments/dryrun is
+populated (run ``python -m repro.launch.dryrun --all`` first for that
+section).
 """
 from __future__ import annotations
 
@@ -18,7 +22,7 @@ def main() -> None:
         ("Fig5/16a: micro-batching ablation", bench_microbatch.main),
         ("Fig7/16b: schedule robustness", bench_schedule.main),
         ("Fig15: padding efficiency", bench_padding.main),
-        ("Fig17: planning time", bench_planning.main),
+        ("Fig17: planning time", lambda: bench_planning.main(quick=True)),
     ]
     failures = []
     for name, fn in sections:

@@ -21,7 +21,6 @@ models use scalar lengths (dec_len = 0).
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 
 import numpy as np
@@ -47,8 +46,61 @@ def _mxu_pad(n: int, align: int = 8) -> int:
     return max(align, -(-n // align) * align)
 
 
+_SHAPE_BITS = 21                       # per-field width of a packed shape key
+_SHAPE_MASK = (1 << _SHAPE_BITS) - 1
+
+
+def encode_shape_triples(cnt, enc, dec):
+    """Pack (cnt, enc, dec) int arrays into one int64 key each; None if any
+    field exceeds the 21-bit range (callers fall back to row-wise unique)."""
+    if cnt.size == 0:
+        return np.empty(0, dtype=np.int64)
+    if (int(cnt.max()) > _SHAPE_MASK or int(enc.max()) > _SHAPE_MASK
+            or int(dec.max()) > _SHAPE_MASK):
+        return None
+    return ((cnt.astype(np.int64) << (2 * _SHAPE_BITS))
+            | (enc.astype(np.int64) << _SHAPE_BITS)
+            | dec.astype(np.int64))
+
+
+def unique_shape_triples(cnt, enc, dec):
+    """(cnt_u, enc_u, dec_u, inverse) over distinct (cnt, enc, dec) rows —
+    a packed-int64 sort when the fields fit, row-wise np.unique otherwise."""
+    keys = encode_shape_triples(cnt, enc, dec)
+    if keys is not None:
+        uk, inv = np.unique(keys, return_inverse=True)
+        return (uk >> (2 * _SHAPE_BITS), (uk >> _SHAPE_BITS) & _SHAPE_MASK,
+                uk & _SHAPE_MASK, inv)
+    tri = np.stack([cnt, enc, dec], axis=1)
+    u, inv = np.unique(tri, axis=0, return_inverse=True)
+    return u[:, 0], u[:, 1], u[:, 2], inv
+
+
+def _norm_seq_batch(mbs, seq) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(mbs[], seq[] or seq[][2]) -> int64 arrays (mbs, enc, dec)."""
+    m = np.asarray(mbs, dtype=np.int64).ravel()
+    s = np.asarray(seq, dtype=np.int64)
+    if s.ndim == 2:
+        enc, dec = s[:, 0].copy(), s[:, 1].copy()
+    else:
+        enc = s.ravel().copy()
+        dec = np.zeros_like(enc)
+    if not (len(m) == len(enc) == len(dec)):
+        raise ValueError(f"batch length mismatch: mbs={len(m)} seq={len(enc)}")
+    return m, enc, dec
+
+
 class CostModel:
-    """Interface used by the planner / DP splitter / scheduler."""
+    """Interface used by the planner / DP splitter / scheduler.
+
+    Scalar methods (``stage_fwd_time`` etc.) are the original per-shape API.
+    ``stage_times_batch`` is the vectorized entry the fast planning path
+    (:func:`repro.core.microbatch.dp_split`) uses exclusively; the base
+    implementation falls back to a scalar loop so any subclass that only
+    defines the scalar methods stays correct. Subclasses that override a
+    scalar method *and* want the fast path to see it must override
+    ``stage_times_batch`` consistently as well.
+    """
 
     def stage_fwd_time(self, mbs: int, seq, tp: int = 1) -> float:
         raise NotImplementedError
@@ -62,14 +114,38 @@ class CostModel:
     def stage_act_memory(self, mbs: int, seq, tp: int = 1) -> float:
         raise NotImplementedError
 
+    def stage_times_batch(self, mbs, seq, tp: int = 1):
+        """Batched costs: ``(t_fwd[], t_bwd[], mem[])`` for k shapes.
+
+        ``seq`` is ``(k,)`` (decoder-only) or ``(k, 2)`` (enc, dec) — a dec
+        of 0 means decoder-only, matching the scalar convention of passing
+        an int instead of a tuple. Fallback: loop over the scalar methods,
+        bit-identical to calling them one shape at a time.
+        """
+        m, enc, dec = _norm_seq_batch(mbs, seq)
+        k = len(m)
+        tf = np.empty(k)
+        tb = np.empty(k)
+        mem = np.empty(k)
+        for r in range(k):
+            s = (int(enc[r]), int(dec[r])) if dec[r] else int(enc[r])
+            tf[r] = self.stage_fwd_time(int(m[r]), s, tp)
+            tb[r] = self.stage_bwd_time(int(m[r]), s, tp)
+            mem[r] = self.stage_act_memory(int(m[r]), s, tp)
+        return tf, tb, mem
+
 
 class AnalyticCostModel(CostModel):
     def __init__(self, cfg: ArchConfig, n_stages: int = 1, hw: HWSpec = V5E,
-                 remat: str = "full"):
+                 remat: str = "full", bwd_mult: float = 1.0):
         self.cfg = cfg
         self.n_stages = n_stages
         self.hw = hw
         self.remat = remat  # "full" | "selective" | "none"
+        # backward = bwd_mult * 2 * forward; recompute policies scale it
+        # (core/recompute.py) — a plain field keeps the model picklable for
+        # process-pool planning.
+        self.bwd_mult = bwd_mult
 
     # -------------------- flops / bytes per layer ----------------------
     def _layer_flops_per_seq(self, mbs: int, seq: int, spec) -> float:
@@ -157,6 +233,9 @@ class AnalyticCostModel(CostModel):
                 by / (self.hw.hbm_bw * self.hw.efficiency))
         return t + self.hw.per_op_overhead
 
+    def stage_bwd_time(self, mbs: int, seq, tp: int = 1) -> float:
+        return self.bwd_mult * (2.0 * self.stage_fwd_time(mbs, seq, tp))
+
     def stage_act_memory(self, mbs: int, seq, tp: int = 1) -> float:
         enc, dec = self._norm_seq(seq)
         cfg = self.cfg
@@ -164,6 +243,100 @@ class AnalyticCostModel(CostModel):
         tokens = mbs * (enc + dec)
         per_layer = {"full": 2.0, "selective": 8.0, "none": 20.0}[self.remat]
         return tokens * cfg.d_model * 2 * per_layer * layers / tp
+
+    # ------------------------- batched interface ------------------------
+    # Vectorized mirrors of the scalar roofline. Every expression keeps the
+    # scalar code's evaluation order so the float64 results are bit-identical
+    # (all integer partial products stay below 2^53 at sane model sizes).
+    def _layer_flops_batch(self, mbs, t, spec):
+        cfg = self.cfg
+        d = cfg.d_model
+        fl = 0.0
+        if spec.mixer.startswith("attn"):
+            h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            fl = fl + 2 * t * d * (h * dh)
+            fl = fl + 2 * 2 * t * d * (kv * dh)
+            fl = fl + 2 * t * (h * dh) * d
+            eff_ctx = t / 2
+            if spec.mixer == "attn_local" and cfg.window:
+                # guard the division for t == 0 rows (masked-out dec side)
+                local = (cfg.window / 2
+                         + (t - cfg.window) * cfg.window / np.maximum(t, 1))
+                eff_ctx = np.where(t > cfg.window, local, eff_ctx)
+            if not cfg.causal:
+                eff_ctx = t
+            fl = fl + 2 * 2 * t * eff_ctx * (h * dh)
+        elif spec.mixer == "mamba":
+            di, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+            fl = fl + 2 * t * d * (2 * di + 2 * g * n + hh)
+            fl = fl + 2 * t * (di + 2 * g * n) * cfg.ssm_conv
+            chunk = np.minimum(128, t)
+            p = cfg.ssm_headdim
+            fl = fl + 2 * t * hh * (chunk * n + chunk * p + 2 * n * p)
+            fl = fl + 2 * t * di * d
+        if spec.moe:
+            mult = 3 if cfg.mlp_gated else 2
+            k_active = cfg.top_k * cfg.capacity_factor + cfg.n_shared_experts
+            fl = fl + 2 * t * d * cfg.d_ff_expert * mult * k_active
+            fl = fl + 2 * t * d * cfg.n_experts
+        elif cfg.d_ff:
+            mult = 3 if cfg.mlp_gated else 2
+            fl = fl + 2 * t * d * cfg.d_ff * mult
+        return mbs * fl
+
+    def _layer_bytes_batch(self, mbs, t, spec):
+        cfg = self.cfg
+        d = cfg.d_model
+        wbytes = 0.0
+        if spec.mixer.startswith("attn"):
+            wbytes = wbytes + 2 * (d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
+                                   + cfg.n_heads * cfg.d_head * d)
+        elif spec.mixer == "mamba":
+            di, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+            wbytes = wbytes + 2 * (d * (2 * di + 2 * g * n + hh) + di * d)
+        if spec.moe:
+            mult = 3 if cfg.mlp_gated else 2
+            act_e = np.minimum(cfg.n_experts, mbs * t * cfg.top_k)
+            wbytes = wbytes + 2 * mult * d * cfg.d_ff_expert * (act_e + cfg.n_shared_experts)
+        elif cfg.d_ff:
+            mult = 3 if cfg.mlp_gated else 2
+            wbytes = wbytes + 2 * mult * d * cfg.d_ff
+        abytes = 2 * mbs * t * d * 6
+        return wbytes + abytes
+
+    def _mean_layer_batch(self, fn, mbs, t):
+        total = 0.0
+        for spec in self.cfg.layer_pattern:
+            total = total + fn(mbs, t, spec)
+        return total / len(self.cfg.layer_pattern)
+
+    def stage_times_batch(self, mbs, seq, tp: int = 1):
+        m, enc, dec = _norm_seq_batch(mbs, seq)
+        # evaluate once per distinct (mbs, enc, dec), then gather
+        mu, encu, decu, inv = unique_shape_triples(m, enc, dec)
+        mpad = np.maximum(8, -(-mu // 8) * 8).astype(np.float64)
+        encf = encu.astype(np.float64)
+        decf = decu.astype(np.float64)
+        layers = self.cfg.n_layers / self.n_stages
+        fl = self._mean_layer_batch(self._layer_flops_batch, mpad, encf)
+        by = self._mean_layer_batch(self._layer_bytes_batch, mpad, encf)
+        has_dec = decu > 0
+        if has_dec.any():
+            fl = fl + np.where(has_dec,
+                               self._mean_layer_batch(self._layer_flops_batch,
+                                                      mpad, decf) * 1.5, 0.0)
+            by = by + np.where(has_dec,
+                               self._mean_layer_batch(self._layer_bytes_batch,
+                                                      mpad, decf) * 1.5, 0.0)
+        fl, by = fl * layers / tp, by * layers / tp
+        tf = np.maximum(fl / (self.hw.peak_flops * self.hw.efficiency),
+                        by / (self.hw.hbm_bw * self.hw.efficiency))
+        tf = tf + self.hw.per_op_overhead
+        tb = self.bwd_mult * (2.0 * tf)
+        tokens = (mu * (encu + decu)).astype(np.float64)
+        per_layer = {"full": 2.0, "selective": 8.0, "none": 20.0}[self.remat]
+        mem = tokens * self.cfg.d_model * 2 * per_layer * layers / tp
+        return tf[inv], tb[inv], mem[inv]
 
 
 class ProfiledCostModel(CostModel):
@@ -176,6 +349,10 @@ class ProfiledCostModel(CostModel):
         self.fwd_t = np.asarray(fwd_t, dtype=np.float64)
         self.bwd_t = np.asarray(bwd_t, dtype=np.float64)
         self.mem = np.asarray(mem, dtype=np.float64)
+        # pre-log the grids once — every interpolation (scalar or batched)
+        # reads these instead of recomputing np.log2(grid) per call
+        self._log2_mbs_grid = np.log2(self.mbs_grid)
+        self._log2_seq_grid = np.log2(self.seq_grid)
 
     @classmethod
     def profile(cls, measure, mbs_grid=(1, 2, 4, 8), seq_grid=(32, 64, 128, 256)):
@@ -188,21 +365,26 @@ class ProfiledCostModel(CostModel):
                 fwd[i, j], bwd[i, j], mem[i, j] = measure(int(m), int(s))
         return cls(mbs_grid, seq_grid, fwd, bwd, mem)
 
-    def _interp(self, table, mbs, seq) -> float:
-        lx = math.log2(max(mbs, 1e-9))
-        ly = math.log2(max(seq, 1e-9))
-        gx = np.log2(self.mbs_grid)
-        gy = np.log2(self.seq_grid)
-        i = int(np.clip(np.searchsorted(gx, lx) - 1, 0, len(gx) - 2))
-        j = int(np.clip(np.searchsorted(gy, ly) - 1, 0, len(gy) - 2))
+    def _interp_batch(self, table, mbs, seqn) -> np.ndarray:
+        """Vectorized log2 bilinear (extrapolating) blend; mbs/seqn float64."""
+        lx = np.log2(np.maximum(mbs, 1e-9))
+        ly = np.log2(np.maximum(seqn, 1e-9))
+        gx = self._log2_mbs_grid
+        gy = self._log2_seq_grid
+        i = np.clip(np.searchsorted(gx, lx) - 1, 0, len(gx) - 2)
+        j = np.clip(np.searchsorted(gy, ly) - 1, 0, len(gy) - 2)
         tx = np.clip((lx - gx[i]) / (gx[i + 1] - gx[i]), 0.0, None)
         ty = np.clip((ly - gy[j]) / (gy[j + 1] - gy[j]), 0.0, None)
-        # linear (extrapolating) blend in log-log space
         v00, v01 = table[i, j], table[i, j + 1]
         v10, v11 = table[i + 1, j], table[i + 1, j + 1]
         v0 = v00 + (v01 - v00) * ty
         v1 = v10 + (v11 - v10) * ty
-        return float(max(v0 + (v1 - v0) * tx, 0.0))
+        return np.maximum(v0 + (v1 - v0) * tx, 0.0)
+
+    def _interp(self, table, mbs, seq) -> float:
+        # scalar path = batch of one, so both are bit-identical by construction
+        return float(self._interp_batch(table, np.asarray([mbs], dtype=np.float64),
+                                        np.asarray([seq], dtype=np.float64))[0])
 
     def _norm_seq(self, seq) -> float:
         if isinstance(seq, (tuple, list, np.ndarray)):
@@ -217,3 +399,12 @@ class ProfiledCostModel(CostModel):
 
     def stage_act_memory(self, mbs, seq, tp: int = 1) -> float:
         return self._interp(self.mem, mbs, self._norm_seq(seq)) / tp
+
+    def stage_times_batch(self, mbs, seq, tp: int = 1):
+        m, enc, dec = _norm_seq_batch(mbs, seq)
+        mf = m.astype(np.float64)
+        seqn = enc.astype(np.float64) + 1.5 * dec.astype(np.float64)
+        tf = self._interp_batch(self.fwd_t, mf, seqn) / tp
+        tb = self._interp_batch(self.bwd_t, mf, seqn) / tp
+        mem = self._interp_batch(self.mem, mf, seqn) / tp
+        return tf, tb, mem

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import multiprocessing
 import time
 from dataclasses import dataclass
 from typing import Optional, Sequence
@@ -163,25 +164,73 @@ def plan_iteration_dynamic_recompute(lengths, cfg, pcfg: PlannerConfig):
     return best.meta["iteration_plan"]
 
 
-class PlannerPool:
-    """Overlaps plan generation with execution (paper §3): a thread pool
-    plans future iterations ahead of the executor and pushes them to the
-    instruction store."""
+def _plan_job(lengths, cost, pcfg: PlannerConfig) -> IterationPlan:
+    """Module-level so ProcessPoolExecutor can pickle the work item."""
+    return plan_iteration(lengths, cost, pcfg)
 
-    def __init__(self, store: InstructionStore, n_workers: int = 4):
+
+class PlannerPool:
+    """Overlaps plan generation with execution (paper §3): a worker pool
+    plans future iterations ahead of the executor and pushes them to the
+    instruction store.
+
+    Backends:
+
+    - threads (default) — zero-copy submission and a shared in-process
+      group-cost LUT, but the numpy/Python DP holds the GIL, so concurrent
+      planning barely scales beyond ~1 effective core. Fine when one
+      iteration's plan comfortably fits inside one iteration's execution.
+    - processes (``use_processes=True``) — true CPU parallelism across
+      iterations (the paper overlaps planning on up to 13 cores, §8.5), at
+      the cost of pickling ``(lengths, cost, pcfg)`` per submission and a
+      cold per-process LUT. Cost models and planner configs must be
+      picklable (`AnalyticCostModel`, `ProfiledCostModel`, and
+      `cost_model_for` products are; see tests/test_planning_fastpath.py).
+      Workers are spawned, not forked — importing ``repro`` loads jax, and
+      forking a multithreaded jax parent risks deadlock — so worker startup
+      pays one interpreter+import per process; the pool is long-lived, so
+      that cost amortizes across the training run.
+    """
+
+    def __init__(self, store: InstructionStore, n_workers: int = 4,
+                 use_processes: bool = False):
         self.store = store
-        self.pool = cf.ThreadPoolExecutor(max_workers=n_workers)
+        self.use_processes = use_processes
+        if use_processes:
+            self.pool = cf.ProcessPoolExecutor(
+                max_workers=n_workers,
+                mp_context=multiprocessing.get_context("spawn"))
+        else:
+            self.pool = cf.ThreadPoolExecutor(max_workers=n_workers)
         self.futures: dict[int, cf.Future] = {}
 
     def submit(self, iteration: int, lengths, cost, pcfg: PlannerConfig):
-        def run():
-            it = plan_iteration(lengths, cost, pcfg)
-            # replica 0's plan is fetched by every stage executor of replica 0 etc.
-            self.store.push(iteration, it.replica_plans[0])
-            return it
-        f = self.pool.submit(run)
-        self.futures[iteration] = f
-        return f
+        inner = self.pool.submit(_plan_job, lengths, cost, pcfg)
+        # chain a parent-side future that also covers the store.push, so a
+        # failing push surfaces through .result() instead of being swallowed
+        # by the done-callback machinery
+        outer: cf.Future = cf.Future()
+
+        def _push(fut: cf.Future):
+            if fut.cancelled():
+                outer.cancel()
+                return
+            exc = fut.exception()
+            if exc is not None:
+                outer.set_exception(exc)
+                return
+            try:
+                it_plan = fut.result()
+                # replica 0's plan is fetched by every stage executor of
+                # replica 0 etc.
+                self.store.push(iteration, it_plan.replica_plans[0])
+                outer.set_result(it_plan)
+            except BaseException as e:      # noqa: BLE001 — must not vanish
+                outer.set_exception(e)
+
+        inner.add_done_callback(_push)
+        self.futures[iteration] = outer
+        return outer
 
     def shutdown(self):
         self.pool.shutdown(wait=True)

@@ -20,16 +20,16 @@ BWD_OVERHEAD = {
 
 def cost_model_for(cfg, n_stages: int, policy: RecomputePolicy,
                    hw=None) -> AnalyticCostModel:
+    """Cost model whose backward time carries the policy's recompute tax.
+
+    The multiplier is a plain ``bwd_mult`` field on :class:`AnalyticCostModel`
+    (not a closure-captured subclass), so the model stays picklable for
+    process-pool planning and its batched ``stage_times_batch`` path sees the
+    same scaled backward times as the scalar API.
+    """
     kw = {"hw": hw} if hw is not None else {}
-    base = AnalyticCostModel(cfg, n_stages, remat=policy.value, **kw)
-    mult = BWD_OVERHEAD[policy]
-
-    class _Wrapped(AnalyticCostModel):
-        def stage_bwd_time(self, mbs, seq, tp=1):
-            return mult * 2.0 * self.stage_fwd_time(mbs, seq, tp)
-
-    w = _Wrapped(cfg, n_stages, remat=policy.value, **kw)
-    return w
+    return AnalyticCostModel(cfg, n_stages, remat=policy.value,
+                             bwd_mult=BWD_OVERHEAD[policy], **kw)
 
 
 def choose_recompute(plan_under_policy: Callable, device_mem: float):

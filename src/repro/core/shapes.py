@@ -18,6 +18,8 @@ import bisect
 import math
 from dataclasses import dataclass, field
 
+import numpy as np
+
 
 def _snap(n: int, align: int) -> int:
     return max(align, -(-n // align) * align)
@@ -59,6 +61,24 @@ class ShapePalette:
 
     def bucket(self, mbs: int, seq_len: int) -> tuple[int, int]:
         return self.bucket_mbs(mbs), self.bucket_seq(seq_len)
+
+    # ----------------- vectorized variants (fast planning path) -----------
+    # Both return (bucketed_values, overflow_mask): out-of-palette inputs are
+    # clamped to the top bucket and flagged instead of raising, so callers
+    # evaluating whole banded tables at once can decide per group (the DP
+    # treats an overflowing multi-sample group as infeasible; a single
+    # sample that overflows is a hard error).
+    def bucket_seq_array(self, seq_lens: np.ndarray):
+        b = np.asarray(self.seq_buckets, dtype=np.int64)
+        i = np.searchsorted(b, seq_lens)
+        overflow = i >= len(b)
+        return b[np.minimum(i, len(b) - 1)], overflow
+
+    def bucket_mbs_array(self, mbs: np.ndarray):
+        b = np.asarray(self.mbs_buckets, dtype=np.int64)
+        i = np.searchsorted(b, mbs)
+        overflow = i >= len(b)
+        return b[np.minimum(i, len(b) - 1)], overflow
 
     def n_shapes(self) -> int:
         return len(self.seq_buckets) * len(self.mbs_buckets)
