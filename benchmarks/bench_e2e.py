@@ -1,0 +1,241 @@
+"""End-to-end training throughput: padding vs packing vs dynamic micro-batching.
+
+The paper's bottom line (Fig. 11/15) is that per-iteration dynamic
+micro-batching beats static padding and packing on heavy-tailed multi-task
+workloads. This benchmark measures it on real JAX CPU compute over the
+deterministic skewed-length ``MultiTaskStream``:
+
+- **padding**  — every sample padded to the stream max length, fixed
+  micro-batch rows (the naive baseline of paper §2.1).
+- **packing**  — first-fit-decreasing packing into max-length rows
+  (the MLM+DS baseline, §2.2), segment-ids prevent cross-attention.
+- **dynamic**  — the plan-ahead runtime (``train/runner.PlanAheadRunner``):
+  DP micro-batching over a ``ShapePalette``, planning double-buffered
+  behind execution; reports the planner-overlap fraction and
+  compiled-step cache stats.
+
+All modes run the same model, optimizer, and stream, twice over the same
+batch set (epoch 0 warms compiles and plans; epoch 1 is timed), and report
+**real tokens/sec** — non-pad tokens processed per wall second, the number
+that actually pays for gradients. Records go to ``BENCH_e2e.json``
+(``--smoke``: a smaller grid to ``BENCH_e2e_smoke.json``, used by CI and
+``benchmarks/check_regression.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.instructions import MicroBatchSpec
+from repro.core.packing import pack_first_fit
+from repro.core.planner import PlannerConfig
+from repro.core.shapes import ShapePalette
+from repro.data.dataset import materialize_micro_batch, materialize_packed_rows
+from repro.data.streams import MultiTaskStream, StreamConfig
+from repro.models import model as MD
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.runner import (
+    PlanAheadRunner,
+    RunnerConfig,
+    build_grad_step,
+    model_cache_namespace,
+)
+from repro.train.step_cache import CompiledStepCache
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BENCH_JSON = REPO_ROOT / "BENCH_e2e.json"
+BENCH_JSON_SMOKE = REPO_ROOT / "BENCH_e2e_smoke.json"
+
+MAX_LEN = 512
+ROWS_PER_MB = 8
+
+
+class RepeatStream:
+    """Replays ``inner.batch(it % period)`` so epoch 1 re-executes epoch 0's
+    batches with warm compiles/plans — the steady state being measured."""
+
+    def __init__(self, inner, period: int):
+        self.inner = inner
+        self.period = period
+
+    def batch(self, iteration: int):
+        return self.inner.batch(iteration % self.period)
+
+
+def tiny_model(vocab: int = 2048):
+    cfg = reduced(get_arch("gpt-paper"))
+    return dataclasses.replace(cfg, name="gpt-bench-e2e", vocab=vocab,
+                               d_model=128, n_heads=4, d_head=32, d_ff=256)
+
+
+def make_stream(n_iters: int, global_tokens: int, seed: int = 0):
+    return MultiTaskStream(StreamConfig(
+        n_tasks=32, global_tokens=global_tokens, max_len=MAX_LEN,
+        vocab=2048, tail_fraction=0.1, tail_alpha=1.2, seed=seed))
+
+
+def _grad_fn(cache: CompiledStepCache, cfg, shape):
+    # the runner's own step builder, so the bench measures the system's math
+    key = ("grad", model_cache_namespace(cfg)) + shape
+    return cache.get(key, lambda: build_grad_step(cfg))
+
+
+def run_baseline(mode: str, stream, cfg, n_iters: int) -> dict:
+    """Static baselines: fixed-shape micro-batches, same step math as the
+    runner's sequential path. Two epochs; epoch 1 timed."""
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=3e-4)
+    opt = init_opt_state(params, opt_cfg)
+    cache = CompiledStepCache()
+    wall = 0.0
+    real_tokens = padded_tokens = 0
+    losses = []
+    for step in range(2 * n_iters):
+        gb = stream.batch(step)
+        if mode == "padding":
+            idxs = list(range(gb.n_samples))
+            chunks = [idxs[i:i + ROWS_PER_MB]
+                      for i in range(0, len(idxs), ROWS_PER_MB)]
+            batches = [materialize_micro_batch(
+                MicroBatchSpec(mb_id=i, sample_indices=chunk,
+                               mbs=ROWS_PER_MB, seq=MAX_LEN,
+                               t_fwd=0.0, t_bwd=0.0, mem=0.0),
+                gb.tokens) for i, chunk in enumerate(chunks)]
+        elif mode == "packing":
+            rows = pack_first_fit(gb.lengths, MAX_LEN)
+            batches = []
+            for i in range(0, len(rows), ROWS_PER_MB):
+                chunk = rows[i:i + ROWS_PER_MB]
+                b = materialize_packed_rows(chunk, gb.tokens, MAX_LEN)
+                if len(chunk) < ROWS_PER_MB:  # pad rows: keep one shape
+                    pad = ROWS_PER_MB - len(chunk)
+                    b = {k: np.concatenate(
+                        [v, np.repeat(v[-1:] * 0 + (-1 if k == "segment_ids"
+                                                    else 0), pad, axis=0)])
+                        for k, v in b.items()}
+                batches.append(b)
+        else:
+            raise ValueError(mode)
+
+        t0 = time.perf_counter()
+        grads, loss_sum, w_sum = None, 0.0, 0.0
+        for b in batches:
+            jb = {k: jnp.asarray(v) for k, v in b.items()}
+            fn = _grad_fn(cache, cfg, tuple(int(d) for d in
+                                            jb["tokens"].shape))
+            ls, ws, g = fn(params, jb)
+            loss_sum += float(ls)
+            w_sum += float(ws)
+            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+        grads = jax.tree.map(lambda g: g * (1.0 / max(w_sum, 1.0)), grads)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        dt = time.perf_counter() - t0
+
+        if step >= n_iters:  # epoch 1: timed
+            wall += dt
+            real_tokens += gb.total_tokens
+            padded_tokens += sum(
+                int(np.prod(b["tokens"].shape)) for b in batches)
+            losses.append(loss_sum / max(w_sum, 1.0))
+    return {
+        "mode": mode,
+        "iters": n_iters,
+        "wall_s": round(wall, 4),
+        "real_tokens": real_tokens,
+        "padded_tokens": padded_tokens,
+        "padding_efficiency": round(real_tokens / max(padded_tokens, 1), 4),
+        "tokens_per_s": round(real_tokens / max(wall, 1e-9), 1),
+        "loss_last": round(losses[-1], 4) if losses else None,
+        "compiled_steps": len(cache),
+    }
+
+
+def run_dynamic(stream, cfg, n_iters: int, lookahead: int = 1) -> dict:
+    """The plan-ahead runtime over the same stream (two epochs, 2nd timed)."""
+    cost = AnalyticCostModel(cfg, n_stages=1)
+    pal = ShapePalette.build(min_seq=64, max_seq=MAX_LEN, seq_align=64,
+                             max_mbs=16)
+    pcfg = PlannerConfig(n_stages=1, d_model=cfg.d_model, palette=pal)
+    rcfg = RunnerConfig(n_iters=2 * n_iters, lookahead=lookahead,
+                        use_executor=False, log_every=0)
+    runner = PlanAheadRunner(cfg, cost, pcfg, rcfg,
+                             RepeatStream(stream, n_iters))
+    _, history, stats = runner.run()
+    timed = history[n_iters:]
+    wall = sum(h["time_s"] for h in timed)
+    real_tokens = sum(h["tokens"] for h in timed)
+    padded_tokens = sum(h["padded_tokens"] for h in timed)
+    plan_wait = sum(h["plan_wait_s"] for h in timed)
+    planning = sum(h["planning_s"] for h in timed)
+    return {
+        "mode": "dynamic",
+        "iters": n_iters,
+        "wall_s": round(wall, 4),
+        "real_tokens": real_tokens,
+        "padded_tokens": padded_tokens,
+        "padding_efficiency": round(real_tokens / max(padded_tokens, 1), 4),
+        "tokens_per_s": round(real_tokens / max(wall, 1e-9), 1),
+        "planner_overlap_fraction": round(
+            max(0.0, min(1.0, (planning - plan_wait) / planning))
+            if planning > 0 else 0.0, 4),
+        "plan_wait_s": round(plan_wait, 4),
+        "planning_s": round(planning, 4),
+        "cache": stats.cache,
+        "loss_last": round(timed[-1]["loss"], 4) if timed else None,
+    }
+
+
+def main(smoke: bool = False):
+    n_iters = 4 if smoke else 12
+    global_tokens = 4096 if smoke else 8192
+    cfg = tiny_model()
+    stream = make_stream(n_iters, global_tokens)
+    print(f"stream: {stream.length_stats(n_iters)}", flush=True)
+
+    records = []
+    for mode in ("padding", "packing"):
+        rec = run_baseline(mode, RepeatStream(stream, n_iters), cfg, n_iters)
+        print(json.dumps(rec), flush=True)
+        records.append(rec)
+    rec = run_dynamic(stream, cfg, n_iters)
+    print(json.dumps(rec), flush=True)
+    records.append(rec)
+
+    by_mode = {r["mode"]: r for r in records}
+    ratio = by_mode["dynamic"]["tokens_per_s"] / max(
+        by_mode["padding"]["tokens_per_s"], 1e-9)
+    summary = {
+        "mode": "_summary",
+        "dynamic_over_padding": round(ratio, 3),
+        "dynamic_over_packing": round(
+            by_mode["dynamic"]["tokens_per_s"]
+            / max(by_mode["packing"]["tokens_per_s"], 1e-9), 3),
+        "planner_overlap_fraction":
+            by_mode["dynamic"]["planner_overlap_fraction"],
+        "smoke": smoke,
+    }
+    print(json.dumps(summary), flush=True)
+    records.append(summary)
+
+    out = BENCH_JSON_SMOKE if smoke else BENCH_JSON
+    out.write_text(json.dumps(records, indent=2) + "\n")
+    print(f"wrote {out}", flush=True)
+    if ratio <= 1.0:
+        raise SystemExit(
+            f"dynamic micro-batching did NOT beat padding: {ratio:.3f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI variant (writes BENCH_e2e_smoke.json)")
+    main(**vars(ap.parse_args()))

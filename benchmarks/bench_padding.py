@@ -2,8 +2,6 @@
 GPT (decoder-only) and T5 (enc-dec, per-stream efficiency)."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, flan_like_lengths
 from repro.configs.base import get_arch
 from repro.core.cost_model import AnalyticCostModel

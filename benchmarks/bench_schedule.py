@@ -8,7 +8,6 @@ import numpy as np
 from benchmarks.common import emit, flan_like_lengths
 from repro.configs.base import get_arch
 from repro.core.cost_model import AnalyticCostModel
-from repro.core.microbatch import dp_split, order_samples, _as2d
 from repro.core.planner import PlannerConfig, plan_iteration
 from repro.core.schedule import schedule_1f1b, schedule_adaptive
 from repro.core.shapes import ShapePalette

@@ -18,9 +18,9 @@ import numpy as np
 from benchmarks.common import emit, flan_like_lengths
 from repro.configs.base import get_arch
 from repro.core.cost_model import AnalyticCostModel
-from repro.core.microbatch import padding_efficiency, _as2d
+from repro.core.microbatch import _as2d
 from repro.core.packing import packing_micro_batches, pack_first_fit, packing_efficiency
-from repro.core.planner import PlannerConfig, plan_iteration, plan_replica, _mb_specs
+from repro.core.planner import PlannerConfig, plan_iteration
 from repro.core.shapes import ShapePalette
 from repro.core.schedule import schedule_1f1b
 from repro.core.simulator import simulate

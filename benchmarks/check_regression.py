@@ -1,0 +1,157 @@
+"""CI benchmark regression gate.
+
+Compares freshly produced smoke benchmark JSONs against the baselines
+committed under ``benchmarks/baselines/`` and exits non-zero on regression:
+
+- **planning** (``BENCH_planning_smoke.json``): the fast-vs-reference
+  ``dp_split`` speedup ratio per scenario ``(n, band, palette)`` must not
+  degrade by more than ``--factor`` (default 2x). The ratio is
+  machine-normalized — both sides run on the same box — so this catches
+  "someone slowed the fast path" without flaking on runner speed.
+- **e2e** (``BENCH_e2e_smoke.json``): the dynamic-over-padding throughput
+  ratio — the e2e smoke throughput normalized by the same machine's
+  padding baseline, so differently-powered CI runners cancel out — must
+  not degrade by more than ``--factor``, and dynamic must still beat the
+  padding baseline outright (the paper's headline claim; bench_e2e also
+  enforces it at generation time). Absolute tokens/sec are printed for
+  the log but not gated: they track runner hardware, not code.
+
+Usage (CI runs exactly this, from the repo root, after the ``--smoke``
+benches):
+
+    python benchmarks/check_regression.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BASELINE_DIR = REPO_ROOT / "benchmarks" / "baselines"
+
+
+def _load(path: Path):
+    if not path.exists():
+        raise SystemExit(
+            f"missing benchmark file: {path} (run the --smoke benches first)"
+        )
+    return json.loads(path.read_text())
+
+
+def check_planning(baseline: list, current: list, factor: float) -> list[str]:
+    failures = []
+    cur_by_key = {(r["n"], r["band"], r["palette"]): r for r in current}
+    for base in baseline:
+        key = (base["n"], base["band"], base["palette"])
+        cur = cur_by_key.get(key)
+        if cur is None:
+            failures.append(f"planning scenario {key} missing from current run")
+            continue
+        if not cur.get("objective_identical", False):
+            failures.append(f"planning {key}: fast/reference objectives diverged")
+        degraded = base["speedup"] / max(cur["speedup"], 1e-9)
+        status = "FAIL" if degraded > factor else "ok"
+        print(
+            f"[{status}] planning {key}: speedup {cur['speedup']:.1f}x "
+            f"(baseline {base['speedup']:.1f}x, "
+            f"degradation {degraded:.2f}x, limit {factor:.1f}x)"
+        )
+        if degraded > factor:
+            failures.append(
+                f"planning {key}: fast-vs-reference ratio degraded "
+                f"{degraded:.2f}x (> {factor:.1f}x)"
+            )
+    return failures
+
+
+def _dyn_over_pad(records: dict) -> float:
+    dyn, pad = records.get("dynamic"), records.get("padding")
+    if dyn is None or pad is None:
+        return float("nan")
+    return dyn["tokens_per_s"] / max(pad["tokens_per_s"], 1e-9)
+
+
+def check_e2e(baseline: list, current: list, factor: float) -> list[str]:
+    failures = []
+    base_by = {r["mode"]: r for r in baseline}
+    cur_by = {r["mode"]: r for r in current}
+    for mode in ("padding", "dynamic"):
+        if mode not in cur_by:
+            failures.append(f"e2e mode {mode!r} missing from current run")
+    if failures:
+        return failures
+
+    # informational only: absolute throughput tracks runner hardware
+    dyn = cur_by["dynamic"]
+    print(
+        f"[info] e2e dynamic: {dyn['tokens_per_s']:.0f} tok/s, "
+        f"planner overlap {dyn.get('planner_overlap_fraction', 0.0):.1%} "
+        f"(absolute numbers not gated)"
+    )
+
+    ratio = _dyn_over_pad(cur_by)
+    status = "FAIL" if ratio <= 1.0 else "ok"
+    print(f"[{status}] e2e dynamic/padding = {ratio:.2f}x (must be > 1)")
+    if ratio <= 1.0:
+        failures.append(
+            f"dynamic micro-batching no longer beats padding ({ratio:.2f}x)"
+        )
+
+    base_ratio = _dyn_over_pad(base_by)
+    if base_ratio == base_ratio:  # baseline has both modes
+        degraded = base_ratio / max(ratio, 1e-9)
+        status = "FAIL" if degraded > factor else "ok"
+        print(
+            f"[{status}] e2e dynamic/padding ratio {ratio:.2f}x "
+            f"(baseline {base_ratio:.2f}x, degradation {degraded:.2f}x, "
+            f"limit {factor:.1f}x)"
+        )
+        if degraded > factor:
+            failures.append(
+                f"e2e dynamic/padding throughput ratio degraded "
+                f"{degraded:.2f}x (> {factor:.1f}x)"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--planning", type=Path, default=REPO_ROOT / "BENCH_planning_smoke.json"
+    )
+    ap.add_argument("--e2e", type=Path, default=REPO_ROOT / "BENCH_e2e_smoke.json")
+    ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
+    ap.add_argument(
+        "--factor",
+        type=float,
+        default=2.0,
+        help="max allowed slowdown ratio vs baseline",
+    )
+    args = ap.parse_args()
+
+    failures = []
+    failures += check_planning(
+        _load(args.baseline_dir / "BENCH_planning_smoke.json"),
+        _load(args.planning),
+        args.factor,
+    )
+    failures += check_e2e(
+        _load(args.baseline_dir / "BENCH_e2e_smoke.json"),
+        _load(args.e2e),
+        args.factor,
+    )
+
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbenchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

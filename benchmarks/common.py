@@ -3,10 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.configs.base import get_arch
-from repro.core.cost_model import AnalyticCostModel
 from repro.data.synthetic import MultiTaskDataset, minibatches_by_token_budget
 
 ROWS: list[str] = []

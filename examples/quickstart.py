@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.core.cost_model import AnalyticCostModel
-from repro.core.microbatch import padding_efficiency, _as2d
+from repro.core.microbatch import _as2d
 from repro.core.packing import pack_first_fit, packing_efficiency
 from repro.core.planner import PlannerConfig, plan_iteration
 from repro.core.shapes import ShapePalette

@@ -18,10 +18,8 @@ Design notes
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 VOCAB_ALIGN = 256

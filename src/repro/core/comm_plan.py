@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from collections import defaultdict
 
-from repro.core.instructions import ExecutionPlan, Instr, MicroBatchSpec, Op
+from repro.core.instructions import Instr, MicroBatchSpec, Op
 from repro.core.simulator import SimResult, simulate
 
 

@@ -20,7 +20,6 @@ models use scalar lengths (dec_len = 0).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import numpy as np

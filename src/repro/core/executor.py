@@ -25,9 +25,6 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.instructions import ExecutionPlan, Instr, Op
 
 

@@ -130,3 +130,10 @@ class InstructionStore:
             if not ok:
                 raise TimeoutError(f"plan for iteration {iteration} not produced")
             return ExecutionPlan.from_json(self._plans[iteration])
+
+    def evict_below(self, iteration: int) -> None:
+        """Drop plans for iterations < ``iteration`` — executed plans are
+        dead, and a long training run must not accumulate their JSON."""
+        with self._cv:
+            for it in [i for i in self._plans if i < iteration]:
+                del self._plans[it]

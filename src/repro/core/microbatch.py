@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import heapq
 import weakref
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 from numpy.lib.stride_tricks import sliding_window_view

@@ -18,19 +18,18 @@ supports elastic re-planning when the replica set changes (dist/fault.py).
 from __future__ import annotations
 
 import concurrent.futures as cf
-import dataclasses
 import multiprocessing
 import time
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 
-from repro.core import comm_plan, microbatch, packing, schedule as sched
+from repro.core import comm_plan, microbatch, schedule as sched
 from repro.core.cost_model import CostModel
 from repro.core.instructions import (ExecutionPlan, InstructionStore,
-                                     MicroBatchSpec, Op, RecomputePolicy)
-from repro.core.recompute import BWD_OVERHEAD, choose_recompute, cost_model_for
+                                     MicroBatchSpec, RecomputePolicy)
+from repro.core.recompute import choose_recompute, cost_model_for
 from repro.core.shapes import ShapePalette
 from repro.core.simulator import simulate
 

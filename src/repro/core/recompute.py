@@ -3,7 +3,6 @@ checkpoint policy by re-running planning under each policy's cost model and
 keeping the fastest plan that fits device memory."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
 from repro.core.cost_model import AnalyticCostModel

@@ -14,7 +14,7 @@ the simulated timeline), and the memory-aware scheduling tests.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -1,0 +1,30 @@
+"""Data subsystem: synthetic multi-task workloads.
+
+- ``synthetic``  — stateful FLANv2-like dataset (length distributions,
+  token-budget mini-batching) used by the original examples.
+- ``streams``    — deterministic counter-seeded global-batch streams
+  (``batch(k)`` is a pure function of config and ``k``) feeding the
+  plan-ahead runtime in ``train/runner.py``.
+- ``dataset``    — micro-batch materialization: sample streams -> padded
+  arrays at the planner's bucketed shapes.
+"""
+
+from repro.data.dataset import materialize_micro_batch, materialize_packed_rows
+from repro.data.streams import (
+    GlobalBatch,
+    MultiTaskStream,
+    StreamConfig,
+    make_stream_tasks,
+)
+from repro.data.synthetic import MultiTaskDataset, minibatches_by_token_budget
+
+__all__ = [
+    "GlobalBatch",
+    "MultiTaskDataset",
+    "MultiTaskStream",
+    "StreamConfig",
+    "make_stream_tasks",
+    "materialize_micro_batch",
+    "materialize_packed_rows",
+    "minibatches_by_token_budget",
+]

@@ -14,7 +14,6 @@ on TPU backends and "ref" elsewhere.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ragged_attention as _ra

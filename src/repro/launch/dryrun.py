@@ -32,20 +32,18 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeSpec,
                                 cell_supported, get_arch)
 from repro.dist.sharding import spec_for
 from repro.launch.mesh import make_production_mesh
-from repro.models import layers as L
 from repro.models import model as MD
 from repro.models import transformer as T
 from repro.train.optimizer import AdamWConfig, adamw_update
 from repro.train import train_state as TS
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
-
 
 # ----------------------------------------------------------------------
 # input specs (assignment step 2): ShapeDtypeStruct stand-ins, no allocation

@@ -39,7 +39,6 @@ _CALLED = re.compile(r"(?:calls|to_apply|body|condition|true_computation|false_c
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _KERNEL_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
-_FEATURE_GROUPS = re.compile(r"feature_group_count=(\d+)")
 
 BOOKKEEPING = {
     "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
@@ -157,9 +156,8 @@ def _conv_flops(ins: Instr, comp: Computation) -> float:
     kelems = 1
     for d in kshape[0][1]:
         kelems *= d
-    fg = _FEATURE_GROUPS.search(ins.rest)
-    groups = int(fg.group(1)) if fg else 1
-    # flops = 2 * out_elems * (kernel_elems / out_features) per group-adjusted
+    # flops = 2 * out_elems * (kernel_elems / out_features); grouped convs
+    # are approximated as dense (feature_group_count is not parsed)
     out_feat = kshape[0][1][-1] if kshape[0][1] else 1
     return 2.0 * out_elems * max(kelems // max(out_feat, 1), 1)
 

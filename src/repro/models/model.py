@@ -13,8 +13,6 @@ Batch schemas (all provided by the data pipeline / ``launch.dryrun.input_specs``
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -24,7 +22,6 @@ from repro.models import layers as L
 from repro.models import transformer as T
 
 LOSS_CHUNK = 512
-
 
 # ----------------------------------------------------------------------
 # init + logical specs

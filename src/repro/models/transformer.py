@@ -9,9 +9,6 @@ activations saved across the backward pass are the period-boundary residuals
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -19,7 +16,6 @@ from repro.configs.base import ArchConfig, LayerSpec
 from repro.dist.sharding import shard
 from repro.models import layers as L
 from repro.models import mamba as M
-
 
 # ----------------------------------------------------------------------
 # per-layer block

@@ -18,7 +18,7 @@ import os
 import shutil
 import time
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import ml_dtypes

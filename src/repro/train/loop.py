@@ -1,40 +1,33 @@
-"""Planner-driven training loop (the end-to-end DynaPipe driver).
+"""Planner-driven training loop — thin wrapper over the plan-ahead runtime.
 
-Per iteration:
-  1. sample a token-budgeted multi-task mini-batch        (data/synthetic)
-  2. fetch the iteration's ExecutionPlan from the store — the PlannerPool
-     planned it while iteration k-1 was executing          (paper §3 overlap)
-  3. materialize micro-batches at bucketed shapes          (data/dataset)
-  4. run the pipeline executor (or single-process fallback accumulating
-     grads over micro-batches sequentially — same math, used on 1 CPU)
-  5. AdamW step on the summed grads / total weight; heartbeat + checkpoint.
+``train()`` keeps the original entry-point signature but delegates to
+``train/runner.PlanAheadRunner``: the ``PlannerPool`` plans iteration k+1
+(dp_split -> adaptive schedule -> comm plan -> instruction lowering) while
+iteration k executes, jitted step functions live in a palette-keyed
+``CompiledStepCache``, and ``LoopConfig.synchronous`` selects the inline
+planning fallback (bit-identical losses; see tests/test_plan_ahead.py).
+
+Data comes from a stream (``batch(k) -> GlobalBatch``). This wrapper adapts
+the stateful ``MultiTaskDataset`` via ``DatasetStream`` for backward
+compatibility; new code should feed a deterministic
+``data/streams.MultiTaskStream`` to ``PlanAheadRunner`` directly.
 
 Fault tolerance: checkpoint every ``ckpt_every`` (topology-agnostic restore),
-straggler speed factors feed the next iteration's replica balancing.
+straggler speed factors feed the next iteration's replica balancing — see
+the ``monitor`` docstring below.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from dataclasses import dataclass
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ArchConfig
 from repro.core.cost_model import CostModel
-from repro.core.executor import PipelineExecutor
-from repro.core.instructions import InstructionStore
-from repro.core.planner import PlannerConfig, PlannerPool, plan_iteration
-from repro.data.dataset import materialize_micro_batch
+from repro.core.planner import PlannerConfig
 from repro.data.synthetic import MultiTaskDataset
 from repro.dist.fault import StragglerMonitor
-from repro.models import model as MD
-from repro.train import checkpoint as CKPT
-from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
-from repro.train.pipeline_adapter import PipelinedModel, _xent_sum
+from repro.train.optimizer import AdamWConfig
+from repro.train.runner import DatasetStream, PlanAheadRunner, RunnerConfig
 
 
 @dataclass
@@ -46,6 +39,9 @@ class LoopConfig:
     use_executor: bool = True        # threaded pipeline vs sequential accum
     log_every: int = 10
     seed: int = 0
+    synchronous: bool = False        # plan inline instead of plan-ahead
+    lookahead: int = 1               # plans in flight ahead of execution
+    use_processes: bool = False      # PlannerPool process backend
 
 
 def train(cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
@@ -66,93 +62,13 @@ def train(cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
     ds = dataset or MultiTaskDataset(n_tasks=16, max_len=pcfg.palette.seq_buckets[-1]
                                      if pcfg.palette else 512,
                                      seed=lcfg.seed)
-    key = jax.random.PRNGKey(lcfg.seed)
-    params = MD.init_params(key, cfg)
-    opt = init_opt_state(params, opt_cfg)
-    start = 0
-    if lcfg.ckpt_dir:
-        state, start = CKPT.restore_or_init(
-            lcfg.ckpt_dir, lambda: {"params": params, "opt": opt})
-        if start:
-            params, opt = state["params"], state["opt"]
-
-    store = InstructionStore()
-    pool = PlannerPool(store, n_workers=2)
-    history = []
-
-    # pre-plan iteration `start` so the overlap pipeline is primed
-    pending: dict[int, tuple] = {}
-
-    futures = {}
-
-    def sample_and_submit(it):
-        lengths, tokens, _ = ds.sample_minibatch(
-            max(2, lcfg.global_tokens // 256), cfg.vocab)
-        # enforce token budget approximately
-        pending[it] = (lengths, tokens)
-        p = pcfg
-        if monitor is not None and pcfg.dp_size > 1:
-            # pad/truncate to dp_size (balance_replicas requires the match)
-            sf = monitor.speed_factors()
-            sf = (sf + [1.0] * pcfg.dp_size)[:pcfg.dp_size]
-            p = dataclasses.replace(pcfg, speed_factors=sf)
-        futures[it] = pool.submit(
-            it, lengths[:, 0] if not np.any(lengths[:, 1]) else lengths,
-            cost, p)
-
-    sample_and_submit(start)
-
-    @jax.jit
-    def grad_mb(p, batch):
-        def f(p_):
-            h, _, _ = MD.forward(p_, batch, cfg, mode="train")
-            return _xent_sum(p_.get("head", p_.get("embed")), h,
-                             batch["labels"], batch["loss_weights"], cfg)
-        (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
-        return loss_sum, w_sum, g
-
-    for it in range(start, start + lcfg.n_iters):
-        t0 = time.perf_counter()
-        if it + 1 < start + lcfg.n_iters:
-            sample_and_submit(it + 1)       # overlap planning of next iter
-        lengths, tokens = pending.pop(it)
-        futures.pop(it).result(timeout=300)  # surfaces planner exceptions
-        plan = store.fetch(it, timeout=30)
-
-        batches = {m.mb_id: materialize_micro_batch(m, tokens)
-                   for m in plan.micro_batches}
-
-        if lcfg.use_executor and pcfg.n_stages > 1 \
-                and cfg.n_periods % pcfg.n_stages == 0:
-            pm = PipelinedModel(cfg, params, pcfg.n_stages)
-            cbs, result = pm.make_callbacks(plan, batches)
-            PipelineExecutor(plan, cbs, timeout=120).run()
-            grads = pm.merge_stage_grads(result["stage_grads"])
-            loss_sum, w_sum = result["loss_sum"], result["weight_sum"]
-        else:
-            grads, loss_sum, w_sum = None, 0.0, 0.0
-            for mb_id in sorted(batches):
-                b = {k: jnp.asarray(v) for k, v in batches[mb_id].items()}
-                ls, ws, g = grad_mb(params, b)
-                loss_sum += float(ls)
-                w_sum += float(ws)
-                grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
-
-        scale = 1.0 / max(w_sum, 1.0)
-        grads = jax.tree.map(lambda g: g * scale, grads)
-        params, opt, om = adamw_update(params, grads, opt, opt_cfg)
-        dt = time.perf_counter() - t0
-        if monitor is not None:
-            monitor.heartbeat(0, iter_time=dt)
-        loss = loss_sum / max(w_sum, 1.0)
-        history.append({"iter": it, "loss": loss, "time_s": dt,
-                        "n_micro": len(plan.micro_batches),
-                        "grad_norm": float(om["grad_norm"])})
-        if lcfg.log_every and it % lcfg.log_every == 0:
-            print(f"iter {it:5d}  loss {loss:8.4f}  micro-batches "
-                  f"{len(plan.micro_batches):3d}  {dt*1e3:7.1f} ms", flush=True)
-        if lcfg.ckpt_dir and lcfg.ckpt_every and (it + 1) % lcfg.ckpt_every == 0:
-            CKPT.save(lcfg.ckpt_dir, it + 1, {"params": params, "opt": opt})
-
-    pool.shutdown()
+    stream = DatasetStream(ds, max(2, lcfg.global_tokens // 256), cfg.vocab)
+    rcfg = RunnerConfig(
+        n_iters=lcfg.n_iters, lookahead=lcfg.lookahead,
+        synchronous=lcfg.synchronous, use_processes=lcfg.use_processes,
+        use_executor=lcfg.use_executor, log_every=lcfg.log_every,
+        ckpt_every=lcfg.ckpt_every, ckpt_dir=lcfg.ckpt_dir, seed=lcfg.seed)
+    runner = PlanAheadRunner(cfg, cost, pcfg, rcfg, stream,
+                             opt_cfg=opt_cfg, monitor=monitor)
+    params, history, _stats = runner.run()
     return params, history

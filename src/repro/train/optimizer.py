@@ -10,8 +10,6 @@ State layout (mixed precision):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,10 +10,15 @@ input — the quantity the planner's memory model charges.
 Tied embeddings are duplicated on stages 0 and c-1; their gradients are
 summed at ``collect_grads`` time (the pipeline analogue of Megatron's
 embedding all-reduce).
+
+Stage fwd/bwd callables are compiled through a ``CompiledStepCache`` keyed by
+``(kind, stage, mbs, seq)``: one ``PipelinedModel`` reused across iterations
+(``set_params`` swaps the weights, which are traced arguments) never
+recompiles a palette shape it has already seen — the plan-ahead runner
+(train/runner.py) shares one cache across the whole run.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
@@ -25,11 +30,38 @@ from repro.core.instructions import ExecutionPlan
 from repro.models import layers as L
 from repro.models import model as MD
 from repro.models import transformer as T
+from repro.train.step_cache import CompiledStepCache
+
+
+def _stage_apply(cfg: ArchConfig, k: int, n_stages: int, impl, j: int,
+                 sparams, x_or_batch, batch_aux):
+    """Stage forward as a module-level pure function of static config —
+    jitted closures capture only these scalars, never a model instance.
+    Returns h_out, or (loss_sum, w_sum) on the last stage."""
+    positions = batch_aux["positions"]
+    segment_ids = batch_aux["segment_ids"]
+    if j == 0:
+        h = MD.embed_inputs(sparams, x_or_batch, cfg)
+    else:
+        h = x_or_batch
+    import dataclasses
+    sub_cfg = dataclasses.replace(cfg, n_layers=k * len(cfg.layer_pattern))
+    h, _, _ = T.stack_fwd(sparams["stack"], h, sub_cfg,
+                          positions=positions, segment_ids=segment_ids,
+                          impl=impl, remat=True)
+    if j == n_stages - 1:
+        h = L.rms_norm(h, sparams["final_norm"], cfg.norm_eps)
+        head = sparams.get("head", sparams.get("embed"))
+        loss_sum, w_sum = _xent_sum(head, h, batch_aux["labels"],
+                                    batch_aux["loss_weights"], cfg)
+        return loss_sum, w_sum
+    return h
 
 
 class PipelinedModel:
     def __init__(self, cfg: ArchConfig, params, n_stages: int,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None,
+                 step_cache: Optional[CompiledStepCache] = None):
         assert cfg.n_periods % n_stages == 0, (
             f"{cfg.name}: n_periods {cfg.n_periods} not divisible by "
             f"{n_stages} stages")
@@ -37,6 +69,17 @@ class PipelinedModel:
         self.n_stages = n_stages
         self.k = cfg.n_periods // n_stages
         self.impl = impl
+        self.full_params = params
+        self.step_cache = step_cache if step_cache is not None \
+            else CompiledStepCache()
+        # cache keys carry full model identity: a shared cache must never
+        # hand one model's compiled stage fn to a different config (or
+        # kernel impl) with equal shapes — repr(cfg) covers every field
+        self._cache_ns = (repr(cfg), n_stages, impl)
+
+    def set_params(self, params):
+        """Swap in updated weights; compiled stage fns are shape-keyed and
+        take params as traced arguments, so no recompilation happens."""
         self.full_params = params
 
     # ------------------------- param slicing ---------------------------
@@ -59,7 +102,6 @@ class PipelinedModel:
 
     def merge_stage_grads(self, stage_grads: list):
         """Sum per-stage grad trees back into a full-params tree."""
-        k = self.k
         out = jax.tree.map(jnp.zeros_like, self.full_params)
         stack_slices = [g["stack"] for g in stage_grads]
         full_stack = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
@@ -75,25 +117,8 @@ class PipelinedModel:
     # ------------------------- stage compute ---------------------------
     def _stage_fn(self, j: int, sparams, x_or_batch, batch_aux):
         """Pure function: stage forward. Returns h_out or (loss_sum, w_sum)."""
-        cfg = self.cfg
-        positions = batch_aux["positions"]
-        segment_ids = batch_aux["segment_ids"]
-        if j == 0:
-            h = MD.embed_inputs(sparams, x_or_batch, cfg)
-        else:
-            h = x_or_batch
-        import dataclasses
-        sub_cfg = dataclasses.replace(cfg, n_layers=self.k * len(cfg.layer_pattern))
-        h, _, _ = T.stack_fwd(sparams["stack"], h, sub_cfg,
-                              positions=positions, segment_ids=segment_ids,
-                              impl=self.impl, remat=True)
-        if j == self.n_stages - 1:
-            h = L.rms_norm(h, sparams["final_norm"], cfg.norm_eps)
-            head = sparams.get("head", sparams.get("embed"))
-            loss_sum, w_sum = _xent_sum(head, h, batch_aux["labels"],
-                                        batch_aux["loss_weights"], cfg)
-            return loss_sum, w_sum
-        return h
+        return _stage_apply(self.cfg, self.k, self.n_stages, self.impl, j,
+                            sparams, x_or_batch, batch_aux)
 
     # ------------------------- callbacks -------------------------------
     def make_callbacks(self, plan: ExecutionPlan, batches: dict,
@@ -117,13 +142,23 @@ class PipelinedModel:
             return {k: b[k] for k in ("positions", "segment_ids", "labels",
                                       "loss_weights") if k in b}
 
-        def fwd_fn(j):
-            @jax.jit
-            def f(sp, x, aux):
-                return self._stage_fn(j, sp, x, aux)
-            return f
+        def shape_of(mb):
+            tok = batches[mb]["tokens"]
+            return int(tok.shape[0]), int(tok.shape[1])
 
-        fwds = [fwd_fn(j) for j in range(c)]
+        # cached jits must close over only static config — never ``self`` —
+        # so a shared step cache that outlives this PipelinedModel does not
+        # pin the retired instance (and its full_params) in memory
+        cfg, k, impl = self.cfg, self.k, self.impl
+
+        def fwd_fn(j, shape):
+            def build():
+                @jax.jit
+                def f(sp, x, aux):
+                    return _stage_apply(cfg, k, c, impl, j, sp, x, aux)
+                return f
+            return self.step_cache.get(("fwd", self._cache_ns, j) + shape,
+                                       build)
 
         def make_forward(j):
             def forward(mb, h_in=None):
@@ -132,7 +167,7 @@ class PipelinedModel:
                 else:
                     x = h_in
                 stashes[j][mb] = x
-                out = fwds[j](sparams[j], x, aux_of(mb))
+                out = fwd_fn(j, shape_of(mb))(sparams[j], x, aux_of(mb))
                 if j == c - 1:
                     stashes[j][mb] = (x, out)
                     loss_sum, w_sum = out
@@ -142,35 +177,43 @@ class PipelinedModel:
                 return out
             return forward
 
-        def bwd_fn(j):
+        def bwd_fn(j, shape):
             if j == c - 1:
+                def build_last():
+                    @jax.jit
+                    def b(sp, x, aux):
+                        def scalar(sp_, x_):
+                            loss_sum, _ = _stage_apply(cfg, k, c, impl, j,
+                                                       sp_, x_, aux)
+                            return loss_sum
+                        (gp, gx) = jax.grad(scalar, argnums=(0, 1))(sp, x)
+                        return gp, gx
+                    return b
+                return self.step_cache.get(("bwd", self._cache_ns, j) + shape,
+                                           build_last)
+
+            def build():
                 @jax.jit
-                def b(sp, x, aux):
-                    def scalar(sp_, x_):
-                        loss_sum, w_sum = self._stage_fn(j, sp_, x_, aux)
-                        return loss_sum
-                    (gp, gx) = jax.grad(scalar, argnums=(0, 1))(sp, x)
+                def b(sp, x, g_out, aux):
+                    _, vjp = jax.vjp(
+                        lambda sp_, x_: _stage_apply(cfg, k, c, impl, j,
+                                                     sp_, x_, aux),
+                        sp, x)
+                    gp, gx = vjp(g_out)
                     return gp, gx
                 return b
-
-            @jax.jit
-            def b(sp, x, g_out, aux):
-                _, vjp = jax.vjp(lambda sp_, x_: self._stage_fn(j, sp_, x_, aux),
-                                 sp, x)
-                gp, gx = vjp(g_out)
-                return gp, gx
-            return b
-
-        bwds = [bwd_fn(j) for j in range(c)]
+            return self.step_cache.get(("bwd", self._cache_ns, j) + shape,
+                                       build)
 
         def make_backward(j):
             def backward(mb, g_out):
                 if j == c - 1:
                     x, _ = stashes[j].pop(mb)
-                    gp, gx = bwds[j](sparams[j], x, aux_of(mb))
+                    gp, gx = bwd_fn(j, shape_of(mb))(sparams[j], x, aux_of(mb))
                 else:
                     x = stashes[j].pop(mb)
-                    gp, gx = bwds[j](sparams[j], x, g_out, aux_of(mb))
+                    gp, gx = bwd_fn(j, shape_of(mb))(sparams[j], x, g_out,
+                                                     aux_of(mb))
                 acc = result["stage_grads"][j]
                 result["stage_grads"][j] = gp if acc is None else jax.tree.map(
                     jnp.add, acc, gp)

@@ -1,0 +1,341 @@
+"""Plan-ahead runtime: double-buffered planning over deterministic streams.
+
+This is the layer that turns the fast planner (core/planner.py, PR 2) and the
+execution substrate into the system the paper describes (§3, §8.5): while
+iteration *k* executes, the ``PlannerPool`` is already running iteration
+*k+1*'s dp_split -> adaptive schedule -> comm plan -> instruction lowering,
+so planning cost never lands on the critical path. Concretely:
+
+- **Streams, not arrays.** The runner consumes any object with
+  ``batch(k) -> GlobalBatch`` (see data/streams.py). Because
+  ``MultiTaskStream.batch`` is a pure function of ``(config, k)``, the only
+  thing a plan-ahead submission needs is the *lengths* of batch k+j — the
+  runner samples them locally and ships them to the pool (threads by
+  default; ``use_processes=True`` for true CPU parallelism).
+- **Double buffering.** ``lookahead`` iterations are kept in flight: plan
+  k+1..k+lookahead are pending while k executes. ``plan_wait_s`` records the
+  time the main loop actually blocked on a plan; together with the
+  worker-measured ``planning_seconds`` it yields the *overlap fraction* —
+  the share of planning work hidden behind execution.
+- **Compiled-step cache.** All jitted step functions (the sequential grad
+  step and every pipeline stage's fwd/bwd) live in one
+  ``CompiledStepCache`` keyed by bucketed ``(mbs, seq)`` shapes, so the
+  ``ShapePalette`` bound on distinct shapes is also a bound on XLA
+  recompiles — measurable as the cache hit rate.
+- **Synchronous fallback.** ``synchronous=True`` plans inline on the main
+  thread (no pool). Both paths execute identical plans over identical
+  batches with the same cached step functions, so losses are bit-identical
+  — tests/test_plan_ahead.py asserts it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.cost_model import CostModel
+from repro.core.executor import PipelineExecutor
+from repro.core.instructions import InstructionStore
+from repro.core.planner import PlannerConfig, PlannerPool, plan_iteration
+from repro.data.dataset import materialize_micro_batch
+from repro.data.streams import GlobalBatch
+from repro.dist.fault import StragglerMonitor
+from repro.models import model as MD
+from repro.train import checkpoint as CKPT
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.pipeline_adapter import PipelinedModel, _xent_sum
+from repro.train.step_cache import CompiledStepCache
+
+
+def model_cache_namespace(cfg: ArchConfig) -> str:
+    """Discriminator prefix for CompiledStepCache keys: a cache may be
+    shared across runners/models, so shape keys alone are not identity —
+    two configs with equal shapes must not hit each other's compiled
+    steps. ``repr`` of the config dataclass covers every field."""
+    return repr(cfg)
+
+
+def build_grad_step(cfg: ArchConfig):
+    """The sequential-path training step: jitted value_and_grad of the
+    summed xent over one micro-batch. Shared by the runner and
+    benchmarks/bench_e2e.py so benches measure exactly the system's math."""
+
+    @jax.jit
+    def grad_mb(p, batch):
+        def f(p_):
+            h, _, _ = MD.forward(p_, batch, cfg, mode="train")
+            return _xent_sum(p_.get("head", p_.get("embed")), h,
+                             batch["labels"], batch["loss_weights"], cfg)
+        (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
+        return loss_sum, w_sum, g
+    return grad_mb
+
+
+@dataclass
+class RunnerConfig:
+    n_iters: int = 50
+    lookahead: int = 1               # plans kept in flight ahead of execution
+    synchronous: bool = False        # plan inline (fallback / bitwise oracle)
+    use_processes: bool = False      # PlannerPool backend (see core/planner.py)
+    use_executor: bool = True        # threaded pipeline vs sequential accum
+    log_every: int = 10
+    ckpt_every: int = 0              # 0 = off
+    ckpt_dir: str = ""
+    seed: int = 0
+    plan_timeout: float = 300.0
+
+
+class DatasetStream:
+    """Adapter: stateful ``MultiTaskDataset`` -> the stream protocol.
+
+    Batches are generated in ascending iteration order on first request (the
+    dataset consumes its RNG sequentially) and cached, so plan-ahead
+    requests for k+1 before k executes — and repeated requests for the same
+    k — are consistent. Unlike ``MultiTaskStream`` this is *not*
+    regenerable across processes; it exists for API compatibility with the
+    original ``train/loop.py`` entry point.
+    """
+
+    def __init__(self, dataset, samples_per_batch: int, vocab: int):
+        self.dataset = dataset
+        self.samples_per_batch = samples_per_batch
+        self.vocab = vocab
+        self._cache: dict[int, GlobalBatch] = {}
+        self._next = 0
+        self._min_live = 0
+
+    def batch(self, iteration: int) -> GlobalBatch:
+        if iteration < self._min_live:
+            raise ValueError(
+                f"batch {iteration} was evicted (oldest live: "
+                f"{self._min_live}); DatasetStream hands out each batch "
+                "once, in ascending order — use MultiTaskStream for "
+                "random access")
+        while self._next <= iteration:
+            lengths, tokens, tids = self.dataset.sample_minibatch(
+                self.samples_per_batch, self.vocab)
+            self._cache[self._next] = GlobalBatch(
+                iteration=self._next, lengths=lengths,
+                task_ids=np.asarray(tids, dtype=np.int64), tokens=tokens)
+            self._next += 1
+        gb = self._cache[iteration]
+        # requests arrive in ascending order (the runner holds its own
+        # reference in _pending), so older entries are dead — evict them
+        # to keep memory flat over long runs
+        for it in [i for i in self._cache if i < iteration]:
+            del self._cache[it]
+        self._min_live = iteration
+        return gb
+
+
+@dataclass
+class RunnerStats:
+    iters: int = 0
+    planning_s: float = 0.0          # total planner CPU seconds (workers)
+    plan_wait_s: float = 0.0         # total main-loop seconds blocked on plans
+    exec_s: float = 0.0              # total iteration wall seconds
+    real_tokens: int = 0
+    padded_tokens: int = 0
+    overlap_planning_s: float = 0.0  # planning_s over overlappable iters (>1st)
+    overlap_wait_s: float = 0.0      # plan_wait_s over the same iters
+    cache: dict = field(default_factory=dict)
+    mode: str = "plan-ahead"
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Share of planning work hidden behind execution (first iteration
+        excluded — there is nothing to overlap the primed plan with)."""
+        if self.overlap_planning_s <= 0:
+            return 0.0
+        hidden = self.overlap_planning_s - self.overlap_wait_s
+        return max(0.0, min(1.0, hidden / self.overlap_planning_s))
+
+    def to_dict(self) -> dict:
+        return {
+            "mode": self.mode,
+            "iters": self.iters,
+            "planning_s": round(self.planning_s, 4),
+            "plan_wait_s": round(self.plan_wait_s, 4),
+            "exec_s": round(self.exec_s, 4),
+            "real_tokens": self.real_tokens,
+            "padded_tokens": self.padded_tokens,
+            "overlap_fraction": round(self.overlap_fraction, 4),
+            "cache": dict(self.cache),
+        }
+
+
+class PlanAheadRunner:
+    """Drives training with planning double-buffered ahead of execution."""
+
+    def __init__(self, cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
+                 rcfg: RunnerConfig, stream,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 monitor: Optional[StragglerMonitor] = None,
+                 step_cache: Optional[CompiledStepCache] = None):
+        self.cfg = cfg
+        self.cost = cost
+        self.pcfg = pcfg
+        self.rcfg = rcfg
+        self.stream = stream
+        self.opt_cfg = opt_cfg if opt_cfg is not None else AdamWConfig(lr=3e-4)
+        self.monitor = monitor
+        self.step_cache = step_cache if step_cache is not None \
+            else CompiledStepCache()
+        self.store = InstructionStore()
+        self.pool: Optional[PlannerPool] = None
+        self._pending: dict[int, GlobalBatch] = {}
+        self._futures: dict = {}
+
+    # ------------------------- planning side ---------------------------
+    @staticmethod
+    def _plan_lengths(gb: GlobalBatch):
+        L = gb.lengths
+        return L[:, 0] if not np.any(L[:, 1]) else L
+
+    def _pcfg_now(self) -> PlannerConfig:
+        p = self.pcfg
+        if self.monitor is not None and p.dp_size > 1:
+            sf = self.monitor.speed_factors()
+            sf = (sf + [1.0] * p.dp_size)[:p.dp_size]
+            p = dataclasses.replace(p, speed_factors=sf)
+        return p
+
+    def _submit(self, it: int) -> None:
+        gb = self.stream.batch(it)
+        self._pending[it] = gb
+        self._futures[it] = self.pool.submit(
+            it, self._plan_lengths(gb), self.cost, self._pcfg_now())
+
+    def _obtain(self, it: int):
+        """Returns (global_batch, execution_plan, wait_s, planning_s)."""
+        if self.rcfg.synchronous:
+            gb = self.stream.batch(it)
+            t0 = time.perf_counter()
+            it_plan = plan_iteration(self._plan_lengths(gb), self.cost,
+                                     self._pcfg_now())
+            self.store.push(it, it_plan.replica_plans[0])
+            plan = self.store.fetch(it, timeout=self.rcfg.plan_timeout)
+            wait = time.perf_counter() - t0
+        else:
+            gb = self._pending.pop(it)
+            t0 = time.perf_counter()
+            it_plan = self._futures.pop(it).result(
+                timeout=self.rcfg.plan_timeout)
+            plan = self.store.fetch(it, timeout=self.rcfg.plan_timeout)
+            wait = time.perf_counter() - t0
+        self.store.evict_below(it)  # executed plans are dead; keep RSS flat
+        return gb, plan, wait, it_plan.planning_seconds
+
+    # ------------------------- execution side --------------------------
+    def _grad_fn(self, mbs: int, seq: int):
+        key = ("grad", model_cache_namespace(self.cfg), mbs, seq)
+        return self.step_cache.get(key, lambda: build_grad_step(self.cfg))
+
+    # ------------------------------ run --------------------------------
+    def run(self):
+        """Returns (params, history, stats: RunnerStats)."""
+        rcfg, pcfg, cfg = self.rcfg, self.pcfg, self.cfg
+        key = jax.random.PRNGKey(rcfg.seed)
+        params = MD.init_params(key, cfg)
+        opt = init_opt_state(params, self.opt_cfg)
+        start = 0
+        if rcfg.ckpt_dir:
+            state, start = CKPT.restore_or_init(
+                rcfg.ckpt_dir, lambda: {"params": params, "opt": opt})
+            if start:
+                params, opt = state["params"], state["opt"]
+
+        pipelined = (rcfg.use_executor and pcfg.n_stages > 1
+                     and cfg.n_periods % pcfg.n_stages == 0)
+        pm = (PipelinedModel(cfg, params, pcfg.n_stages,
+                             step_cache=self.step_cache)
+              if pipelined else None)
+
+        end = start + rcfg.n_iters
+        if not rcfg.synchronous:
+            self.pool = PlannerPool(
+                self.store, n_workers=max(2, rcfg.lookahead + 1),
+                use_processes=rcfg.use_processes)
+            for i in range(start, min(start + rcfg.lookahead, end)):
+                self._submit(i)
+
+        history = []
+        stats = RunnerStats(
+            mode="synchronous" if rcfg.synchronous else "plan-ahead")
+        try:
+            for it in range(start, end):
+                t0 = time.perf_counter()
+                if not rcfg.synchronous and it + rcfg.lookahead < end:
+                    self._submit(it + rcfg.lookahead)
+                gb, plan, wait_s, planning_s = self._obtain(it)
+
+                batches = {m.mb_id: materialize_micro_batch(m, gb.tokens)
+                           for m in plan.micro_batches}
+                if pipelined:
+                    pm.set_params(params)
+                    cbs, result = pm.make_callbacks(plan, batches)
+                    PipelineExecutor(plan, cbs, timeout=120).run()
+                    grads = pm.merge_stage_grads(result["stage_grads"])
+                    loss_sum, w_sum = result["loss_sum"], result["weight_sum"]
+                else:
+                    grads, loss_sum, w_sum = None, 0.0, 0.0
+                    for mb_id in sorted(batches):
+                        b = {k: jnp.asarray(v)
+                             for k, v in batches[mb_id].items()}
+                        mbs, seq = b["tokens"].shape
+                        ls, ws, g = self._grad_fn(int(mbs), int(seq))(params, b)
+                        loss_sum += float(ls)
+                        w_sum += float(ws)
+                        grads = g if grads is None else jax.tree.map(
+                            jnp.add, grads, g)
+
+                scale = 1.0 / max(w_sum, 1.0)
+                grads = jax.tree.map(lambda g: g * scale, grads)
+                params, opt, om = adamw_update(params, grads, opt,
+                                               self.opt_cfg)
+                dt = time.perf_counter() - t0
+                if self.monitor is not None:
+                    self.monitor.heartbeat(0, iter_time=dt)
+
+                padded = sum(
+                    m.mbs * (sum(m.seq) if isinstance(m.seq, (tuple, list))
+                             else m.seq)
+                    for m in plan.micro_batches)
+                loss = loss_sum / max(w_sum, 1.0)
+                history.append({
+                    "iter": it, "loss": loss, "time_s": dt,
+                    "n_micro": len(plan.micro_batches),
+                    "grad_norm": float(om["grad_norm"]),
+                    "plan_wait_s": wait_s, "planning_s": planning_s,
+                    "tokens": gb.total_tokens, "padded_tokens": int(padded),
+                })
+                stats.iters += 1
+                stats.planning_s += planning_s
+                stats.plan_wait_s += wait_s
+                stats.exec_s += dt
+                stats.real_tokens += gb.total_tokens
+                stats.padded_tokens += int(padded)
+                if it > start:
+                    stats.overlap_planning_s += planning_s
+                    stats.overlap_wait_s += wait_s
+
+                if rcfg.log_every and it % rcfg.log_every == 0:
+                    print(f"iter {it:5d}  loss {loss:8.4f}  micro-batches "
+                          f"{len(plan.micro_batches):3d}  {dt*1e3:7.1f} ms  "
+                          f"plan-wait {wait_s*1e3:6.1f} ms", flush=True)
+                if rcfg.ckpt_dir and rcfg.ckpt_every \
+                        and (it + 1) % rcfg.ckpt_every == 0:
+                    CKPT.save(rcfg.ckpt_dir, it + 1,
+                              {"params": params, "opt": opt})
+        finally:
+            if self.pool is not None:
+                self.pool.shutdown()
+                self.pool = None
+        stats.cache = self.step_cache.stats()
+        return params, history, stats

@@ -13,7 +13,7 @@ from repro.configs.base import get_arch, reduced
 from repro.core import comm_plan
 from repro.core.cost_model import AnalyticCostModel
 from repro.core.executor import DeadlockError, PipelineExecutor, StageCallbacks
-from repro.core.instructions import ExecutionPlan, MicroBatchSpec, Op
+from repro.core.instructions import ExecutionPlan, MicroBatchSpec
 from repro.core.planner import PlannerConfig, plan_iteration
 from repro.core.schedule import schedule_adaptive
 from repro.core.shapes import ShapePalette

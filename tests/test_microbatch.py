@@ -1,13 +1,12 @@
 """DP micro-batch construction properties (paper §4), hypothesis-driven."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import AnalyticCostModel, CostModel
 from repro.core.microbatch import (balance_replicas, dp_split, iteration_time,
                                    karmarkar_karp, order_samples,
                                    padding_efficiency)
-from repro.core.packing import fixed_size_micro_batches, token_based_micro_batches
+from repro.core.packing import fixed_size_micro_batches
 from repro.core.shapes import ShapePalette
 from repro.configs.base import get_arch
 

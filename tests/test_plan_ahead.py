@@ -1,0 +1,104 @@
+"""Plan-ahead runtime: async/sync bit-identity, step-cache bounds, executor."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.planner import PlannerConfig
+from repro.core.shapes import ShapePalette
+from repro.data.streams import MultiTaskStream, StreamConfig
+from repro.train.runner import PlanAheadRunner, RunnerConfig
+from repro.train.step_cache import CompiledStepCache
+
+CFG = dataclasses.replace(reduced(get_arch("gpt-paper")), n_layers=2)
+PAL = ShapePalette.build(min_seq=32, max_seq=128, seq_align=32, max_mbs=8)
+STREAM_CFG = StreamConfig(n_tasks=8, global_tokens=768, max_len=128,
+                          vocab=CFG.vocab, seed=3)
+
+
+def _runner(n_iters=5, synchronous=False, n_stages=1, use_executor=False,
+            lookahead=1, stream_cfg=STREAM_CFG, step_cache=None):
+    cm = AnalyticCostModel(CFG, n_stages=n_stages)
+    pcfg = PlannerConfig(n_stages=n_stages, d_model=CFG.d_model, palette=PAL)
+    rcfg = RunnerConfig(n_iters=n_iters, synchronous=synchronous,
+                        lookahead=lookahead, use_executor=use_executor,
+                        log_every=0)
+    return PlanAheadRunner(CFG, cm, pcfg, rcfg, MultiTaskStream(stream_cfg),
+                           step_cache=step_cache)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def test_plan_ahead_matches_synchronous_bitwise():
+    """The tentpole invariant: double-buffered planning changes *when* plans
+    are computed, never *what* executes — losses and params bit-identical."""
+    p_async, h_async, s_async = _runner(synchronous=False).run()
+    p_sync, h_sync, s_sync = _runner(synchronous=True).run()
+    assert [h["loss"] for h in h_async] == [h["loss"] for h in h_sync]
+    assert [h["n_micro"] for h in h_async] == [h["n_micro"] for h in h_sync]
+    assert _tree_equal(p_async, p_sync)
+    assert s_async.mode == "plan-ahead" and s_sync.mode == "synchronous"
+    assert s_sync.overlap_fraction == 0.0
+
+
+def test_lookahead_two_matches_too():
+    p1, h1, _ = _runner(synchronous=True).run()
+    p2, h2, _ = _runner(synchronous=False, lookahead=2).run()
+    assert [h["loss"] for h in h1] == [h["loss"] for h in h2]
+    assert _tree_equal(p1, p2)
+
+
+def test_step_cache_bounded_by_palette():
+    """Palette bucketing must bound compilations: distinct compiled steps
+    <= |palette|, and steady-state iterations hit the cache."""
+    cache = CompiledStepCache()
+    _, history, stats = _runner(n_iters=8, step_cache=cache).run()
+    assert len(history) == 8
+    assert cache.misses == len(cache)
+    assert len(cache) <= PAL.n_shapes()
+    grad_keys = {k for k in cache.keys() if k[0] == "grad"}
+    assert all(
+        (mbs in PAL.mbs_buckets and seq in PAL.seq_buckets)
+        for _, _ns, mbs, seq in grad_keys)
+    assert stats.cache["hit_rate"] >= 0.5, stats.cache
+    assert cache.hits + cache.misses == sum(h["n_micro"] for h in history)
+
+
+def test_overlap_hides_planning():
+    """With CPU execution orders of magnitude slower than planning these
+    tiny plans, nearly all planning time must be hidden."""
+    _, history, stats = _runner(n_iters=6).run()
+    assert stats.planning_s > 0
+    assert stats.overlap_fraction > 0.5, stats.to_dict()
+    # steady-state iterations should barely block on plans
+    waits = [h["plan_wait_s"] for h in history[1:]]
+    assert sum(waits) < stats.planning_s
+
+
+def test_history_records_token_accounting():
+    _, history, stats = _runner(n_iters=3).run()
+    for h in history:
+        assert h["tokens"] > 0
+        assert h["padded_tokens"] >= h["tokens"]
+    assert stats.real_tokens == sum(h["tokens"] for h in history)
+
+
+@pytest.mark.slow
+def test_plan_ahead_with_pipeline_executor_matches_sync():
+    """Same invariant through the threaded pipeline executor (2 stages)."""
+    kw = dict(n_iters=4, n_stages=2, use_executor=True)
+    shared = CompiledStepCache()
+    p_async, h_async, _ = _runner(synchronous=False, step_cache=shared,
+                                  **kw).run()
+    p_sync, h_sync, _ = _runner(synchronous=True, step_cache=shared,
+                                **kw).run()
+    assert [h["loss"] for h in h_async] == [h["loss"] for h in h_sync]
+    assert _tree_equal(p_async, p_sync)
+    assert all(np.isfinite(h["loss"]) for h in h_async)

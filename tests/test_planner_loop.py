@@ -12,7 +12,6 @@ from repro.core.instructions import InstructionStore, Op, RecomputePolicy
 from repro.core.planner import (PlannerConfig, PlannerPool, plan_iteration,
                                 plan_iteration_dynamic_recompute)
 from repro.core.shapes import ShapePalette
-from repro.data.synthetic import MultiTaskDataset
 from repro.launch.hlo_cost import analyze
 from repro.train.loop import LoopConfig, train
 from repro.train.optimizer import AdamWConfig

@@ -1,7 +1,5 @@
 """Substrate tests: optimizer, checkpointing, fault tolerance, data, palette,
 cost models, HLO cost parser."""
-import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp
@@ -9,20 +7,17 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.base import get_arch, reduced
-from repro.core.cost_model import (AnalyticCostModel, HWSpec,
-                                   ProfiledCostModel, V5E)
+from repro.configs.base import get_arch
+from repro.core.cost_model import AnalyticCostModel, ProfiledCostModel
 from repro.core.shapes import ShapePalette
 from repro.data.dataset import materialize_micro_batch, materialize_packed_rows
 from repro.data.synthetic import MultiTaskDataset, minibatches_by_token_budget
 from repro.core.instructions import MicroBatchSpec
-from repro.core.packing import pack_first_fit, packing_efficiency
+from repro.core.packing import pack_first_fit
 from repro.dist.fault import ElasticPlanManager, StragglerMonitor
 from repro.train import checkpoint as CKPT
 from repro.train.optimizer import (AdamWConfig, adamw_update,
-                                   compress_for_reduce, global_norm,
-                                   init_opt_state)
-
+                                   compress_for_reduce, init_opt_state)
 
 # ------------------------------ optimizer ------------------------------
 def test_adamw_converges_quadratic():
