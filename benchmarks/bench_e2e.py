@@ -3,12 +3,21 @@
 The paper's bottom line (Fig. 11/15) is that per-iteration dynamic
 micro-batching beats static padding and packing on heavy-tailed multi-task
 workloads. This benchmark measures it on real JAX CPU compute over the
-deterministic skewed-length ``MultiTaskStream``:
+deterministic skewed-length ``MultiTaskStream``, in two scenarios:
 
-- **padding**  — every sample padded to the stream max length, fixed
+- ``--scenario gpt`` — decoder-only causal LM (default).
+- ``--scenario t5``  — the paper's flagship **encoder-decoder** workload:
+  2D (enc, dec) lengths, separate padded enc/dec arrays, dec-side loss,
+  and the dynamic mode running the enc-dec *pipeline* (encoder stages
+  feeding decoder+cross-attention stages through the threaded executor).
+
+Modes per scenario:
+
+- **padding**  — every sample padded to the stream max length(s), fixed
   micro-batch rows (the naive baseline of paper §2.1).
 - **packing**  — first-fit-decreasing packing into max-length rows
-  (the MLM+DS baseline, §2.2), segment-ids prevent cross-attention.
+  (the MLM+DS baseline, §2.2), segment-ids prevent cross-attention; the
+  t5 variant packs (enc, dec) pairs with matched segment ids on both sides.
 - **dynamic**  — the plan-ahead runtime (``train/runner.PlanAheadRunner``):
   DP micro-batching over a ``ShapePalette``, planning double-buffered
   behind execution; reports the planner-overlap fraction and
@@ -17,8 +26,9 @@ deterministic skewed-length ``MultiTaskStream``:
 All modes run the same model, optimizer, and stream, twice over the same
 batch set (epoch 0 warms compiles and plans; epoch 1 is timed), and report
 **real tokens/sec** — non-pad tokens processed per wall second, the number
-that actually pays for gradients. Records go to ``BENCH_e2e.json``
-(``--smoke``: a smaller grid to ``BENCH_e2e_smoke.json``, used by CI and
+that actually pays for gradients. Records go to ``BENCH_e2e.json`` /
+``BENCH_e2e_t5.json`` (``--smoke``: a smaller grid to
+``BENCH_e2e[_t5]_smoke.json``, used by CI and
 ``benchmarks/check_regression.py``).
 """
 from __future__ import annotations
@@ -36,27 +46,37 @@ import numpy as np
 from repro.configs.base import get_arch, reduced
 from repro.core.cost_model import AnalyticCostModel
 from repro.core.instructions import MicroBatchSpec
-from repro.core.packing import pack_first_fit
+from repro.core.packing import pack_encdec_first_fit, pack_first_fit
 from repro.core.planner import PlannerConfig
 from repro.core.shapes import ShapePalette
-from repro.data.dataset import materialize_micro_batch, materialize_packed_rows
+from repro.data.dataset import (
+    materialize_micro_batch,
+    materialize_packed_encdec_rows,
+    materialize_packed_rows,
+)
 from repro.data.streams import MultiTaskStream, StreamConfig
 from repro.models import model as MD
+from repro.models import transformer as T
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 from repro.train.runner import (
     PlanAheadRunner,
     RunnerConfig,
+    build_encdec_grad_step,
     build_grad_step,
     model_cache_namespace,
 )
 from repro.train.step_cache import CompiledStepCache
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
-BENCH_JSON = REPO_ROOT / "BENCH_e2e.json"
-BENCH_JSON_SMOKE = REPO_ROOT / "BENCH_e2e_smoke.json"
 
 MAX_LEN = 512
+MAX_DEC = 128          # t5 scenario: stream dec lengths cap at max_len // 4
 ROWS_PER_MB = 8
+
+
+def bench_json_path(scenario: str, smoke: bool) -> Path:
+    tag = "" if scenario == "gpt" else f"_{scenario}"
+    return REPO_ROOT / f"BENCH_e2e{tag}{'_smoke' if smoke else ''}.json"
 
 
 class RepeatStream:
@@ -71,28 +91,88 @@ class RepeatStream:
         return self.inner.batch(iteration % self.period)
 
 
-def tiny_model(vocab: int = 2048):
+def tiny_model(scenario: str = "gpt", vocab: int = 2048):
+    if scenario == "t5":
+        cfg = dataclasses.replace(reduced(get_arch("t5-paper")), n_layers=2)
+        return dataclasses.replace(cfg, name="t5-bench-e2e", vocab=vocab,
+                                   d_model=128, n_heads=4, d_head=32,
+                                   d_ff=256)
     cfg = reduced(get_arch("gpt-paper"))
     return dataclasses.replace(cfg, name="gpt-bench-e2e", vocab=vocab,
                                d_model=128, n_heads=4, d_head=32, d_ff=256)
 
 
-def make_stream(n_iters: int, global_tokens: int, seed: int = 0):
+def make_stream(scenario: str, global_tokens: int, seed: int = 0):
     return MultiTaskStream(StreamConfig(
         n_tasks=32, global_tokens=global_tokens, max_len=MAX_LEN,
-        vocab=2048, tail_fraction=0.1, tail_alpha=1.2, seed=seed))
+        vocab=2048, tail_fraction=0.1, tail_alpha=1.2,
+        encdec_fraction=1.0 if scenario == "t5" else 0.0, seed=seed))
 
 
 def _grad_fn(cache: CompiledStepCache, cfg, shape):
-    # the runner's own step builder, so the bench measures the system's math
+    # the runner's own step builders, so the bench measures the system's math
     key = ("grad", model_cache_namespace(cfg)) + shape
-    return cache.get(key, lambda: build_grad_step(cfg))
+    build = build_encdec_grad_step if len(shape) == 3 else build_grad_step
+    return cache.get(key, lambda: build(cfg))
 
 
-def run_baseline(mode: str, stream, cfg, n_iters: int) -> dict:
+def _padded_size(b) -> int:
+    if "enc_tokens" in b:
+        return int(np.prod(b["enc_tokens"].shape)
+                   + np.prod(b["dec_tokens"].shape))
+    return int(np.prod(b["tokens"].shape))
+
+
+def _pad_rows(b: dict, pad: int) -> dict:
+    """Append ``pad`` fully-masked rows so every micro-batch keeps one
+    compiled shape (segment ids -1, everything else 0)."""
+    return {k: np.concatenate(
+        [v, np.repeat(v[-1:] * 0 + (-1 if k.endswith("segment_ids") else 0),
+                      pad, axis=0)])
+        for k, v in b.items()}
+
+
+def _baseline_batches(mode: str, scenario: str, gb) -> list[dict]:
+    encdec = scenario == "t5"
+    if mode == "padding":
+        idxs = list(range(gb.n_samples))
+        chunks = [idxs[i:i + ROWS_PER_MB]
+                  for i in range(0, len(idxs), ROWS_PER_MB)]
+        seq = (MAX_LEN, MAX_DEC) if encdec else MAX_LEN
+        return [materialize_micro_batch(
+            MicroBatchSpec(mb_id=i, sample_indices=chunk, mbs=ROWS_PER_MB,
+                           seq=seq, t_fwd=0.0, t_bwd=0.0, mem=0.0),
+            gb.tokens, lengths=gb.lengths) for i, chunk in enumerate(chunks)]
+    if mode == "packing":
+        batches = []
+        if encdec:
+            rows = pack_encdec_first_fit(gb.lengths, MAX_LEN, MAX_DEC)
+            for i in range(0, len(rows), ROWS_PER_MB):
+                chunk = rows[i:i + ROWS_PER_MB]
+                b = materialize_packed_encdec_rows(
+                    chunk, gb.tokens, gb.lengths, MAX_LEN, MAX_DEC)
+                if len(chunk) < ROWS_PER_MB:
+                    b = _pad_rows(b, ROWS_PER_MB - len(chunk))
+                batches.append(b)
+            return batches
+        rows = pack_first_fit(gb.lengths, MAX_LEN)
+        for i in range(0, len(rows), ROWS_PER_MB):
+            chunk = rows[i:i + ROWS_PER_MB]
+            b = materialize_packed_rows(chunk, gb.tokens, MAX_LEN)
+            if len(chunk) < ROWS_PER_MB:
+                b = _pad_rows(b, ROWS_PER_MB - len(chunk))
+            batches.append(b)
+        return batches
+    raise ValueError(mode)
+
+
+def run_baseline(mode: str, stream, cfg, n_iters: int,
+                 scenario: str = "gpt") -> dict:
     """Static baselines: fixed-shape micro-batches, same step math as the
     runner's sequential path. Two epochs; epoch 1 timed."""
-    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    params = (T.init_encdec(jax.random.PRNGKey(0), cfg)
+              if scenario == "t5" else MD.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
     opt_cfg = AdamWConfig(lr=3e-4)
     opt = init_opt_state(params, opt_cfg)
     cache = CompiledStepCache()
@@ -101,37 +181,14 @@ def run_baseline(mode: str, stream, cfg, n_iters: int) -> dict:
     losses = []
     for step in range(2 * n_iters):
         gb = stream.batch(step)
-        if mode == "padding":
-            idxs = list(range(gb.n_samples))
-            chunks = [idxs[i:i + ROWS_PER_MB]
-                      for i in range(0, len(idxs), ROWS_PER_MB)]
-            batches = [materialize_micro_batch(
-                MicroBatchSpec(mb_id=i, sample_indices=chunk,
-                               mbs=ROWS_PER_MB, seq=MAX_LEN,
-                               t_fwd=0.0, t_bwd=0.0, mem=0.0),
-                gb.tokens) for i, chunk in enumerate(chunks)]
-        elif mode == "packing":
-            rows = pack_first_fit(gb.lengths, MAX_LEN)
-            batches = []
-            for i in range(0, len(rows), ROWS_PER_MB):
-                chunk = rows[i:i + ROWS_PER_MB]
-                b = materialize_packed_rows(chunk, gb.tokens, MAX_LEN)
-                if len(chunk) < ROWS_PER_MB:  # pad rows: keep one shape
-                    pad = ROWS_PER_MB - len(chunk)
-                    b = {k: np.concatenate(
-                        [v, np.repeat(v[-1:] * 0 + (-1 if k == "segment_ids"
-                                                    else 0), pad, axis=0)])
-                        for k, v in b.items()}
-                batches.append(b)
-        else:
-            raise ValueError(mode)
+        batches = _baseline_batches(mode, scenario, gb)
 
         t0 = time.perf_counter()
         grads, loss_sum, w_sum = None, 0.0, 0.0
         for b in batches:
             jb = {k: jnp.asarray(v) for k, v in b.items()}
-            fn = _grad_fn(cache, cfg, tuple(int(d) for d in
-                                            jb["tokens"].shape))
+            # the runner's own shape convention, so cache keys stay in sync
+            fn = _grad_fn(cache, cfg, PlanAheadRunner._batch_shape(jb))
             ls, ws, g = fn(params, jb)
             loss_sum += float(ls)
             w_sum += float(ws)
@@ -143,8 +200,7 @@ def run_baseline(mode: str, stream, cfg, n_iters: int) -> dict:
         if step >= n_iters:  # epoch 1: timed
             wall += dt
             real_tokens += gb.total_tokens
-            padded_tokens += sum(
-                int(np.prod(b["tokens"].shape)) for b in batches)
+            padded_tokens += sum(_padded_size(b) for b in batches)
             losses.append(loss_sum / max(w_sum, 1.0))
     return {
         "mode": mode,
@@ -159,14 +215,17 @@ def run_baseline(mode: str, stream, cfg, n_iters: int) -> dict:
     }
 
 
-def run_dynamic(stream, cfg, n_iters: int, lookahead: int = 1) -> dict:
-    """The plan-ahead runtime over the same stream (two epochs, 2nd timed)."""
-    cost = AnalyticCostModel(cfg, n_stages=1)
+def run_dynamic(stream, cfg, n_iters: int, lookahead: int = 1,
+                n_stages: int = 1, use_executor: bool = False) -> dict:
+    """The plan-ahead runtime over the same stream (two epochs, 2nd timed).
+    ``n_stages > 1`` with ``use_executor`` drives the threaded pipeline
+    executor (the t5 scenario's enc-dec pipeline)."""
+    cost = AnalyticCostModel(cfg, n_stages=n_stages)
     pal = ShapePalette.build(min_seq=64, max_seq=MAX_LEN, seq_align=64,
                              max_mbs=16)
-    pcfg = PlannerConfig(n_stages=1, d_model=cfg.d_model, palette=pal)
+    pcfg = PlannerConfig(n_stages=n_stages, d_model=cfg.d_model, palette=pal)
     rcfg = RunnerConfig(n_iters=2 * n_iters, lookahead=lookahead,
-                        use_executor=False, log_every=0)
+                        use_executor=use_executor, log_every=0)
     runner = PlanAheadRunner(cfg, cost, pcfg, rcfg,
                              RepeatStream(stream, n_iters))
     _, history, stats = runner.run()
@@ -194,19 +253,25 @@ def run_dynamic(stream, cfg, n_iters: int, lookahead: int = 1) -> dict:
     }
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, scenario: str = "gpt", stages: int = 0):
     n_iters = 4 if smoke else 12
     global_tokens = 4096 if smoke else 8192
-    cfg = tiny_model()
-    stream = make_stream(n_iters, global_tokens)
+    cfg = tiny_model(scenario)
+    stream = make_stream(scenario, global_tokens)
     print(f"stream: {stream.length_stats(n_iters)}", flush=True)
+    if stages == 0:
+        # t5 default: the 2-stage enc-dec pipeline (encoder stage feeding
+        # the decoder+cross-attn stage through the threaded executor)
+        stages = 2 if scenario == "t5" else 1
 
     records = []
     for mode in ("padding", "packing"):
-        rec = run_baseline(mode, RepeatStream(stream, n_iters), cfg, n_iters)
+        rec = run_baseline(mode, RepeatStream(stream, n_iters), cfg, n_iters,
+                           scenario=scenario)
         print(json.dumps(rec), flush=True)
         records.append(rec)
-    rec = run_dynamic(stream, cfg, n_iters)
+    rec = run_dynamic(stream, cfg, n_iters, n_stages=stages,
+                      use_executor=stages > 1)
     print(json.dumps(rec), flush=True)
     records.append(rec)
 
@@ -215,6 +280,8 @@ def main(smoke: bool = False):
         by_mode["padding"]["tokens_per_s"], 1e-9)
     summary = {
         "mode": "_summary",
+        "scenario": scenario,
+        "n_stages": stages,
         "dynamic_over_padding": round(ratio, 3),
         "dynamic_over_packing": round(
             by_mode["dynamic"]["tokens_per_s"]
@@ -226,7 +293,7 @@ def main(smoke: bool = False):
     print(json.dumps(summary), flush=True)
     records.append(summary)
 
-    out = BENCH_JSON_SMOKE if smoke else BENCH_JSON
+    out = bench_json_path(scenario, smoke)
     out.write_text(json.dumps(records, indent=2) + "\n")
     print(f"wrote {out}", flush=True)
     if ratio <= 1.0:
@@ -237,5 +304,11 @@ def main(smoke: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="small CI variant (writes BENCH_e2e_smoke.json)")
+                    help="small CI variant (writes BENCH_e2e*_smoke.json)")
+    ap.add_argument("--scenario", choices=("gpt", "t5"), default="gpt",
+                    help="gpt: decoder-only; t5: the paper's enc-dec "
+                         "pipeline workload")
+    ap.add_argument("--stages", type=int, default=0,
+                    help="pipeline stages for the dynamic mode "
+                         "(0 = scenario default: gpt 1, t5 2)")
     main(**vars(ap.parse_args()))

@@ -8,13 +8,14 @@ committed under ``benchmarks/baselines/`` and exits non-zero on regression:
   degrade by more than ``--factor`` (default 2x). The ratio is
   machine-normalized — both sides run on the same box — so this catches
   "someone slowed the fast path" without flaking on runner speed.
-- **e2e** (``BENCH_e2e_smoke.json``): the dynamic-over-padding throughput
-  ratio — the e2e smoke throughput normalized by the same machine's
-  padding baseline, so differently-powered CI runners cancel out — must
-  not degrade by more than ``--factor``, and dynamic must still beat the
-  padding baseline outright (the paper's headline claim; bench_e2e also
-  enforces it at generation time). Absolute tokens/sec are printed for
-  the log but not gated: they track runner hardware, not code.
+- **e2e** (``BENCH_e2e_smoke.json`` and ``BENCH_e2e_t5_smoke.json`` — the
+  decoder-only and the enc-dec pipeline scenario): the dynamic-over-padding
+  throughput ratio — the e2e smoke throughput normalized by the same
+  machine's padding baseline, so differently-powered CI runners cancel
+  out — must not degrade by more than ``--factor``, and dynamic must still
+  beat the padding baseline outright (the paper's headline claim; bench_e2e
+  also enforces it at generation time). Absolute tokens/sec are printed
+  for the log but not gated: they track runner hardware, not code.
 
 Usage (CI runs exactly this, from the repo root, after the ``--smoke``
 benches):
@@ -74,30 +75,33 @@ def _dyn_over_pad(records: dict) -> float:
     return dyn["tokens_per_s"] / max(pad["tokens_per_s"], 1e-9)
 
 
-def check_e2e(baseline: list, current: list, factor: float) -> list[str]:
+def check_e2e(
+    baseline: list, current: list, factor: float, label: str = "e2e"
+) -> list[str]:
     failures = []
     base_by = {r["mode"]: r for r in baseline}
     cur_by = {r["mode"]: r for r in current}
     for mode in ("padding", "dynamic"):
         if mode not in cur_by:
-            failures.append(f"e2e mode {mode!r} missing from current run")
+            failures.append(f"{label} mode {mode!r} missing from current run")
     if failures:
         return failures
 
     # informational only: absolute throughput tracks runner hardware
     dyn = cur_by["dynamic"]
     print(
-        f"[info] e2e dynamic: {dyn['tokens_per_s']:.0f} tok/s, "
+        f"[info] {label} dynamic: {dyn['tokens_per_s']:.0f} tok/s, "
         f"planner overlap {dyn.get('planner_overlap_fraction', 0.0):.1%} "
         f"(absolute numbers not gated)"
     )
 
     ratio = _dyn_over_pad(cur_by)
     status = "FAIL" if ratio <= 1.0 else "ok"
-    print(f"[{status}] e2e dynamic/padding = {ratio:.2f}x (must be > 1)")
+    print(f"[{status}] {label} dynamic/padding = {ratio:.2f}x (must be > 1)")
     if ratio <= 1.0:
         failures.append(
-            f"dynamic micro-batching no longer beats padding ({ratio:.2f}x)"
+            f"{label}: dynamic micro-batching no longer beats padding "
+            f"({ratio:.2f}x)"
         )
 
     base_ratio = _dyn_over_pad(base_by)
@@ -105,13 +109,13 @@ def check_e2e(baseline: list, current: list, factor: float) -> list[str]:
         degraded = base_ratio / max(ratio, 1e-9)
         status = "FAIL" if degraded > factor else "ok"
         print(
-            f"[{status}] e2e dynamic/padding ratio {ratio:.2f}x "
+            f"[{status}] {label} dynamic/padding ratio {ratio:.2f}x "
             f"(baseline {base_ratio:.2f}x, degradation {degraded:.2f}x, "
             f"limit {factor:.1f}x)"
         )
         if degraded > factor:
             failures.append(
-                f"e2e dynamic/padding throughput ratio degraded "
+                f"{label} dynamic/padding throughput ratio degraded "
                 f"{degraded:.2f}x (> {factor:.1f}x)"
             )
     return failures
@@ -123,6 +127,9 @@ def main() -> int:
         "--planning", type=Path, default=REPO_ROOT / "BENCH_planning_smoke.json"
     )
     ap.add_argument("--e2e", type=Path, default=REPO_ROOT / "BENCH_e2e_smoke.json")
+    ap.add_argument(
+        "--e2e-t5", type=Path, default=REPO_ROOT / "BENCH_e2e_t5_smoke.json"
+    )
     ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
     ap.add_argument(
         "--factor",
@@ -142,6 +149,12 @@ def main() -> int:
         _load(args.baseline_dir / "BENCH_e2e_smoke.json"),
         _load(args.e2e),
         args.factor,
+    )
+    failures += check_e2e(
+        _load(args.baseline_dir / "BENCH_e2e_t5_smoke.json"),
+        _load(args.e2e_t5),
+        args.factor,
+        label="e2e-t5",
     )
 
     if failures:

@@ -91,6 +91,10 @@ class ExecutionPlan:
     @classmethod
     def from_json(cls, s: str) -> "ExecutionPlan":
         d = json.loads(s)
+        for m in d["micro_batches"]:
+            # JSON has no tuples: restore the 2D (enc, dec) seq convention
+            if isinstance(m.get("seq"), list):
+                m["seq"] = tuple(m["seq"])
         return cls(
             n_stages=d["n_stages"],
             micro_batches=[MicroBatchSpec(**m) for m in d["micro_batches"]],

@@ -36,6 +36,30 @@ def pack_first_fit(lengths, max_len: int) -> list[PackedRow]:
     return rows
 
 
+def pack_encdec_first_fit(lengths, max_enc: int, max_dec: int) -> list[list[int]]:
+    """First-fit-decreasing packing of (enc, dec) pairs: a sample joins a
+    row only if its encoder part fits the row's remaining enc budget AND its
+    decoder part fits the dec budget (both sides of a pair must share the
+    row for segment-matched cross-attention). Oversize singles are clipped
+    to the budgets, mirroring :func:`pack_first_fit` truncation."""
+    L = _as2d(lengths)
+    order = np.argsort(L.sum(axis=1))[::-1]
+    rows: list[list[int]] = []
+    used: list[tuple[int, int]] = []          # (enc_used, dec_used) per row
+    for idx in order:
+        e = min(int(L[idx, 0]), max_enc)
+        d = min(int(L[idx, 1]), max_dec)
+        for r, (ue, ud) in enumerate(used):
+            if ue + e <= max_enc and ud + d <= max_dec:
+                rows[r].append(int(idx))
+                used[r] = (ue + e, ud + d)
+                break
+        else:
+            rows.append([int(idx)])
+            used.append((e, d))
+    return rows
+
+
 def packing_micro_batches(lengths, max_len: int, rows_per_mb: int,
                           cost: CostModel) -> list[MicroBatch]:
     rows = pack_first_fit(lengths, max_len)

@@ -32,7 +32,6 @@ def schedule_1f1b(n_micro: int, n_stages: int) -> list[list[tuple[int, str]]]:
                 nf += 1
             order.append((nb, "B"))
             nb += 1
-        # strip interleaving artifacts: ensure exactly n_micro F and B
         out.append(order)
     return out
 
@@ -119,12 +118,16 @@ def cluster_permute_order(
     labels = np.searchsorted(qs, t)
     clusters = [list(np.where(labels == c)[0]) for c in range(n_clusters)]
     clusters = [c for c in clusters if c]
+    unpermuted = [i for c in clusters for i in c]
     if evaluate is None or len(clusters) <= 1:
-        return [i for c in clusters for i in c]
-    best, best_val = None, float("inf")
+        return unpermuted
+    # fall back to the unpermuted cluster order when evaluate never yields a
+    # finite makespan (e.g. every permutation raises memory-infeasible) —
+    # returning None would crash the scheduler downstream
+    best, best_val = unpermuted, float("inf")
     for perm in itertools.permutations(range(len(clusters))):
         cand = [i for ci in perm for i in clusters[ci]]
         val = evaluate(cand)
-        if val < best_val:
+        if np.isfinite(val) and val < best_val:
             best, best_val = cand, val
     return best

@@ -94,7 +94,13 @@ def simulate(
                 r = dep_ready(i, j, kind)
                 if r is None:
                     break
-                r = r + (comm_latency if not (kind == "B" and j == n_stages - 1) else 0.0)
+                # comm latency applies only to ops whose dependency arrives
+                # over a link: stage-0 forward injections come from the host
+                # (dep_ready == 0.0) and the last stage's backward consumes
+                # its own forward locally — neither pays a hop.
+                local = (kind == "F" and j == 0) or \
+                        (kind == "B" and j == n_stages - 1)
+                r = r + (0.0 if local else comm_latency)
                 # safety stock at the moment the device frees up: how many of
                 # the device's upcoming ops are already dependency-ready
                 s = dev_free[j]

@@ -79,6 +79,21 @@ class GlobalBatch:
     def total_tokens(self) -> int:
         return int(self.lengths.sum())
 
+    @property
+    def has_decoder(self) -> bool:
+        """True when any sample carries a decoder target (2D workload)."""
+        return bool(np.any(self.lengths[:, 1]))
+
+    # Each sample's id stream concatenates its encoder and decoder tokens;
+    # the per-sample (enc_len, dec_len) pair is the split point. These views
+    # are what the enc-dec micro-batch materialization consumes.
+    def enc_tokens(self, i: int) -> np.ndarray:
+        return self.tokens[i][: int(self.lengths[i, 0])]
+
+    def dec_tokens(self, i: int) -> np.ndarray:
+        e = int(self.lengths[i, 0])
+        return self.tokens[i][e : e + int(self.lengths[i, 1])]
+
 
 def make_stream_tasks(cfg: StreamConfig) -> list[StreamTask]:
     """Task mixture derived deterministically from the config seed: log-uniform

@@ -14,6 +14,7 @@ on TPU backends and "ref" elsewhere.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ragged_attention as _ra
@@ -45,7 +46,21 @@ def attention(
     """
     impl = _resolve(impl)
     h, kvh = q.shape[2], k.shape[2]
+    if (q_segment_ids is None) != (kv_segment_ids is None):
+        # one-sided segment ids (e.g. cross-attention with padded encoder
+        # keys but no decoder segments): synthesize the missing side as one
+        # all-zero segment so the mask applies — every path previously
+        # required both sides and silently dropped a lone one
+        if q_segment_ids is None:
+            q_segment_ids = jnp.zeros(q.shape[:2], jnp.int32)
+        else:
+            kv_segment_ids = jnp.zeros(k.shape[:2], jnp.int32)
     ragged = q_segment_ids is not None
+    if ragged and (window != 0 or softcap is not None):
+        # the ragged Pallas kernel only implements plain (causal) softmax;
+        # gemma2-style window/softcap configs over packed/segmented batches
+        # route to the segment-masked jnp oracle instead of crashing
+        impl = "ref"
     if impl == "ref":
         big = q.shape[1] * k.shape[1] * h >= 2048 * 2048 * 8
         if big and chunk_strategy == "head":
@@ -63,7 +78,6 @@ def attention(
     kr = _ref._repeat_kv(k, h // kvh)
     vr = _ref._repeat_kv(v, h // kvh)
     if ragged:
-        assert window == 0 and softcap is None, "ragged kernel: plain causal only"
         return _ra.ragged_attention(
             q, kr, vr, q_segment_ids, kv_segment_ids, causal=causal,
             q_positions=q_positions, kv_positions=kv_positions,

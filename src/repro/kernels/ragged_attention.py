@@ -112,9 +112,16 @@ def ragged_attention(
 ) -> jax.Array:
     b, t, h, d = q.shape
     s = k.shape[1]
+    # Blocks must tile the sequence exactly. When a bucketed length is not a
+    # multiple of the requested block (e.g. palette bucket 768 with block
+    # 512), shrink to the gcd: the largest divisor of the length that also
+    # divides the request, so alignment factors (128/64/32 buckets) survive.
     block_q = min(block_q, t)
     block_kv = min(block_kv, s)
-    assert t % block_q == 0 and s % block_kv == 0
+    if t % block_q:
+        block_q = math.gcd(t, block_q)
+    if s % block_kv:
+        block_kv = math.gcd(s, block_kv)
     nq, nk = t // block_q, s // block_kv
 
     if q_positions is None:

@@ -228,13 +228,18 @@ def _none_like_periods(params, cfg):
 
 
 # ----------------------------------------------------------------------
-# T5-style encoder-decoder (paper-validation model; runs at reduced scale)
+# T5-style encoder-decoder (the paper's flagship workload)
 # ----------------------------------------------------------------------
 def init_encdec(key, cfg: ArchConfig):
+    """Cross-attention params are stacked *period-major* (leading dim
+    ``n_periods``, like the enc/dec stacks) so they slice into pipeline
+    stages the same way: stage j of the decoder owns ``cross[j*k:(j+1)*k]``
+    alongside ``dec[j*k:(j+1)*k]``. One cross block runs after each period
+    (T5 has per-layer cross-attn; t5-paper's period is 1 layer, so exact)."""
     ks = jax.random.split(key, 6)
     dt = L._dtype(cfg)
     dec_cross = []
-    for i in range(cfg.n_layers):
+    for i in range(cfg.n_periods):
         kk = jax.random.fold_in(ks[4], i)
         dec_cross.append({"ln": jnp.zeros((cfg.d_model,), dt),
                           "attn": L.init_attention(kk, cfg)})
@@ -248,47 +253,90 @@ def init_encdec(key, cfg: ArchConfig):
     }
 
 
-def encdec_fwd(params, enc_tokens, dec_tokens, cfg: ArchConfig, *,
-               enc_segments=None, dec_segments=None, impl=None, remat=True):
-    """Returns decoder hidden states (B, T_dec, D)."""
-    b, t_enc = enc_tokens.shape
-    t_dec = dec_tokens.shape[1]
-    enc_pos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32)[None], (b, t_enc))
-    dec_pos = jnp.broadcast_to(jnp.arange(t_dec, dtype=jnp.int32)[None], (b, t_dec))
+def cross_attention_fwd(p, x, he, cfg: ArchConfig, *,
+                        q_segment_ids=None, kv_segment_ids=None, impl=None):
+    """One cross-attention block: queries from the decoder stream ``x``,
+    keys/values from the encoder output ``he`` (no RoPE — absolute content
+    addressing). Segment ids mask padded encoder keys and, in packed rows,
+    keep each decoder segment on its own encoder segment. Returns the
+    residual delta (caller adds it to ``x``'s stream)."""
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    hh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    b = xn.shape[0]
+    q = jnp.einsum("btd,de->bte", xn, p["attn"]["wq"]).reshape(b, -1, hh, dh)
+    k = jnp.einsum("bsd,de->bse", he, p["attn"]["wk"]).reshape(b, -1, kv, dh)
+    v = jnp.einsum("bsd,de->bse", he, p["attn"]["wv"]).reshape(b, -1, kv, dh)
+    from repro.kernels import ops
+    o = ops.attention(q, k, v, causal=False,
+                      q_segment_ids=q_segment_ids,
+                      kv_segment_ids=kv_segment_ids, impl=impl)
+    return jnp.einsum("bthk,hkd->btd", o,
+                      p["attn"]["wo"].reshape(hh, dh, cfg.d_model))
 
-    he = jnp.take(params["embed"], enc_tokens, axis=0)
+
+def enc_stage_fwd(stack_params, h, cfg: ArchConfig, *,
+                  positions, segment_ids=None, impl=None, remat=True):
+    """Encoder slice: non-causal stack over ``stack_params``'s periods.
+    ``cfg.n_periods`` must equal the slice's period count (pipeline stages
+    pass a ``dataclasses.replace``d sub-config). ``h`` is already embedded."""
     enc_cfg = cfg if not cfg.causal else _replace_causal(cfg, False)
-    he, _, _ = stack_fwd(params["enc"], he, enc_cfg, positions=enc_pos,
-                         segment_ids=enc_segments, impl=impl, remat=remat)
-    he = L.rms_norm(he, params["enc_norm"], cfg.norm_eps)
+    h, _, _ = stack_fwd(stack_params, h, enc_cfg, positions=positions,
+                        segment_ids=segment_ids, impl=impl, remat=remat)
+    return h
 
-    hd = jnp.take(params["embed"], dec_tokens, axis=0)
+
+def dec_stage_fwd(params, hd, he, cfg: ArchConfig, *,
+                  positions, segment_ids=None, enc_segment_ids=None,
+                  impl=None, remat=True):
+    """Decoder slice: causal self-attention periods, each followed by
+    cross-attention against the encoder output ``he``. ``params`` carries
+    period-major ``{"stack", "cross"}`` slices of equal leading length;
+    ``he`` is the *final* encoder output, which the pipeline forwards
+    unchanged to every decoder stage."""
 
     def dec_period(h, xs):
         pparams, cross_p = xs
         for i, spec in enumerate(cfg.layer_pattern):
             h, _, _ = block_fwd(pparams[f"l{i}"], h, cfg, spec,
-                                positions=dec_pos, segment_ids=dec_segments,
+                                positions=positions, segment_ids=segment_ids,
                                 impl=impl)
-        # cross attention after each period (T5 has per-layer cross-attn;
-        # period==1 layer for t5-paper so this is exact)
-        x = L.rms_norm(h, cross_p["ln"], cfg.norm_eps)
-        hh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-        b = x.shape[0]
-        q = jnp.einsum("btd,de->bte", x, cross_p["attn"]["wq"]) \
-            .reshape(b, -1, hh, dh)
-        k = jnp.einsum("bsd,de->bse", he, cross_p["attn"]["wk"]) \
-            .reshape(b, -1, kv, dh)
-        v = jnp.einsum("bsd,de->bse", he, cross_p["attn"]["wv"]) \
-            .reshape(b, -1, kv, dh)
-        from repro.kernels import ops
-        o = ops.attention(q, k, v, causal=False, impl=impl)
-        h = h + jnp.einsum("bthk,hkd->btd", o,
-                           cross_p["attn"]["wo"].reshape(hh, dh, cfg.d_model))
+        h = h + cross_attention_fwd(cross_p, h, he, cfg,
+                                    q_segment_ids=segment_ids,
+                                    kv_segment_ids=enc_segment_ids, impl=impl)
         return h, None
 
     fn = jax.checkpoint(dec_period) if remat else dec_period
-    hd, _ = jax.lax.scan(fn, hd, (params["dec"], params["cross"]))
+    hd, _ = jax.lax.scan(fn, hd, (params["stack"], params["cross"]))
+    return hd
+
+
+def encdec_fwd(params, enc_tokens, dec_tokens, cfg: ArchConfig, *,
+               enc_segments=None, dec_segments=None,
+               enc_positions=None, dec_positions=None,
+               impl=None, remat=True):
+    """Sequential oracle: the full encoder-decoder forward, composed of the
+    same ``enc_stage_fwd``/``dec_stage_fwd`` primitives the pipelined
+    execution slices — pipelined runs are parity-tested against this.
+    Returns decoder hidden states (B, T_dec, D)."""
+    b, t_enc = enc_tokens.shape
+    t_dec = dec_tokens.shape[1]
+    if enc_positions is None:
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(t_enc, dtype=jnp.int32)[None], (b, t_enc))
+    if dec_positions is None:
+        dec_positions = jnp.broadcast_to(
+            jnp.arange(t_dec, dtype=jnp.int32)[None], (b, t_dec))
+
+    he = jnp.take(params["embed"], enc_tokens, axis=0)
+    he = enc_stage_fwd(params["enc"], he, cfg, positions=enc_positions,
+                       segment_ids=enc_segments, impl=impl, remat=remat)
+    he = L.rms_norm(he, params["enc_norm"], cfg.norm_eps)
+
+    hd = jnp.take(params["embed"], dec_tokens, axis=0)
+    hd = dec_stage_fwd({"stack": params["dec"], "cross": params["cross"]},
+                       hd, he, cfg, positions=dec_positions,
+                       segment_ids=dec_segments,
+                       enc_segment_ids=enc_segments, impl=impl, remat=remat)
     return L.rms_norm(hd, params["dec_norm"], cfg.norm_eps)
 
 

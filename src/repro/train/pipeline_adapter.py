@@ -12,13 +12,23 @@ summed at ``collect_grads`` time (the pipeline analogue of Megatron's
 embedding all-reduce).
 
 Stage fwd/bwd callables are compiled through a ``CompiledStepCache`` keyed by
-``(kind, stage, mbs, seq)``: one ``PipelinedModel`` reused across iterations
-(``set_params`` swaps the weights, which are traced arguments) never
-recompiles a palette shape it has already seen — the plan-ahead runner
-(train/runner.py) shares one cache across the whole run.
+``(kind, stage, mbs, seq)`` — 2D micro-batches key by ``(mbs, enc, dec)`` —
+so one model reused across iterations (``set_params`` swaps the weights,
+which are traced arguments) never recompiles a palette shape it has already
+seen; the plan-ahead runner (train/runner.py) shares one cache across the
+whole run.
+
+``EncDecPipelinedModel`` is the encoder-decoder stage layout (the paper's
+T5 workload): encoder periods occupy the early stages, decoder periods (with
+their period-major cross-attention blocks) the later ones, and the final
+encoder output rides the pipe unchanged to every decoder stage — the
+inter-stage payload on the decoder side is the pair ``(he, hd)``, and
+``jax.vjp`` over that pair routes cross-attention gradients back through the
+encoder stages without any extra communication primitives.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -44,7 +54,6 @@ def _stage_apply(cfg: ArchConfig, k: int, n_stages: int, impl, j: int,
         h = MD.embed_inputs(sparams, x_or_batch, cfg)
     else:
         h = x_or_batch
-    import dataclasses
     sub_cfg = dataclasses.replace(cfg, n_layers=k * len(cfg.layer_pattern))
     h, _, _ = T.stack_fwd(sparams["stack"], h, sub_cfg,
                           positions=positions, segment_ids=segment_ids,
@@ -58,24 +67,87 @@ def _stage_apply(cfg: ArchConfig, k: int, n_stages: int, impl, j: int,
     return h
 
 
+def _encdec_stage_apply(cfg: ArchConfig, k: int, n_stages: int,
+                        n_enc_stages: int, impl, j: int,
+                        sparams, x_or_batch, batch_aux):
+    """Encoder-decoder stage forward (module-level pure function, like
+    ``_stage_apply``). Stage kinds by position:
+
+      j < n_enc_stages          encoder slice: in batch|he, out he
+      j == n_enc_stages         first decoder slice: in he (the final
+                                encoder output), embeds dec tokens itself,
+                                out (he, hd)
+      j > n_enc_stages          decoder slice: in (he, hd), out (he, hd) —
+                                he passes through so every decoder stage
+                                cross-attends the same encoder output
+      j == n_stages - 1         + dec norm and dec-side loss -> (loss, w)
+    """
+    sub_cfg = dataclasses.replace(cfg, n_layers=k * len(cfg.layer_pattern))
+    enc_seg = batch_aux["enc_segment_ids"]
+    if j < n_enc_stages:
+        if j == 0:
+            h = jnp.take(sparams["embed"], x_or_batch["enc_tokens"], axis=0)
+        else:
+            h = x_or_batch
+        h = T.enc_stage_fwd(sparams["stack"], h, sub_cfg,
+                            positions=batch_aux["enc_positions"],
+                            segment_ids=enc_seg, impl=impl, remat=True)
+        if j == n_enc_stages - 1:
+            h = L.rms_norm(h, sparams["enc_norm"], cfg.norm_eps)
+        return h
+    if j == n_enc_stages:
+        he = x_or_batch
+        hd = jnp.take(sparams["embed"], batch_aux["dec_tokens"], axis=0)
+    else:
+        he, hd = x_or_batch
+    hd = T.dec_stage_fwd({"stack": sparams["stack"],
+                          "cross": sparams["cross"]},
+                         hd, he, sub_cfg,
+                         positions=batch_aux["dec_positions"],
+                         segment_ids=batch_aux["dec_segment_ids"],
+                         enc_segment_ids=enc_seg, impl=impl, remat=True)
+    if j == n_stages - 1:
+        hd = L.rms_norm(hd, sparams["dec_norm"], cfg.norm_eps)
+        return _xent_sum(sparams["embed"], hd, batch_aux["labels"],
+                         batch_aux["loss_weights"], cfg)
+    return (he, hd)
+
+
 class PipelinedModel:
+    _aux_keys = ("positions", "segment_ids", "labels", "loss_weights")
+
     def __init__(self, cfg: ArchConfig, params, n_stages: int,
                  impl: Optional[str] = None,
                  step_cache: Optional[CompiledStepCache] = None):
-        assert cfg.n_periods % n_stages == 0, (
-            f"{cfg.name}: n_periods {cfg.n_periods} not divisible by "
-            f"{n_stages} stages")
         self.cfg = cfg
         self.n_stages = n_stages
-        self.k = cfg.n_periods // n_stages
         self.impl = impl
         self.full_params = params
         self.step_cache = step_cache if step_cache is not None \
             else CompiledStepCache()
+        self._init_layout()
+
+    def _init_layout(self):
+        """Validate the stage split and bind the stage-apply hook; the
+        enc-dec subclass overrides this (and only this) part of init."""
+        cfg, n_stages = self.cfg, self.n_stages
+        assert cfg.n_periods % n_stages == 0, (
+            f"{cfg.name}: n_periods {cfg.n_periods} not divisible by "
+            f"{n_stages} stages")
+        self.k = cfg.n_periods // n_stages
         # cache keys carry full model identity: a shared cache must never
         # hand one model's compiled stage fn to a different config (or
         # kernel impl) with equal shapes — repr(cfg) covers every field
-        self._cache_ns = (repr(cfg), n_stages, impl)
+        self._cache_ns = (repr(cfg), n_stages, self.impl)
+        # stage apply = module-level fn + static scalars: jitted closures
+        # capture only these, never the model instance (see make_callbacks)
+        self._apply_fn = _stage_apply
+        self._apply_static = (cfg, self.k, n_stages, self.impl)
+
+    @staticmethod
+    def _batch_shape(b) -> tuple:
+        tok = b["tokens"]
+        return int(tok.shape[0]), int(tok.shape[1])
 
     def set_params(self, params):
         """Swap in updated weights; compiled stage fns are shape-keyed and
@@ -137,25 +209,25 @@ class PipelinedModel:
         sparams = [self.stage_params(j) for j in range(c)]
         stashes: list[dict] = [dict() for _ in range(c)]
 
+        aux_keys = self._aux_keys
+
         def aux_of(mb):
             b = batches[mb]
-            return {k: b[k] for k in ("positions", "segment_ids", "labels",
-                                      "loss_weights") if k in b}
+            return {k: b[k] for k in aux_keys if k in b}
 
         def shape_of(mb):
-            tok = batches[mb]["tokens"]
-            return int(tok.shape[0]), int(tok.shape[1])
+            return self._batch_shape(batches[mb])
 
         # cached jits must close over only static config — never ``self`` —
         # so a shared step cache that outlives this PipelinedModel does not
         # pin the retired instance (and its full_params) in memory
-        cfg, k, impl = self.cfg, self.k, self.impl
+        apply_fn, static = self._apply_fn, self._apply_static
 
         def fwd_fn(j, shape):
             def build():
                 @jax.jit
                 def f(sp, x, aux):
-                    return _stage_apply(cfg, k, c, impl, j, sp, x, aux)
+                    return apply_fn(*static, j, sp, x, aux)
                 return f
             return self.step_cache.get(("fwd", self._cache_ns, j) + shape,
                                        build)
@@ -183,8 +255,7 @@ class PipelinedModel:
                     @jax.jit
                     def b(sp, x, aux):
                         def scalar(sp_, x_):
-                            loss_sum, _ = _stage_apply(cfg, k, c, impl, j,
-                                                       sp_, x_, aux)
+                            loss_sum, _ = apply_fn(*static, j, sp_, x_, aux)
                             return loss_sum
                         (gp, gx) = jax.grad(scalar, argnums=(0, 1))(sp, x)
                         return gp, gx
@@ -196,8 +267,7 @@ class PipelinedModel:
                 @jax.jit
                 def b(sp, x, g_out, aux):
                     _, vjp = jax.vjp(
-                        lambda sp_, x_: _stage_apply(cfg, k, c, impl, j,
-                                                     sp_, x_, aux),
+                        lambda sp_, x_: apply_fn(*static, j, sp_, x_, aux),
                         sp, x)
                     gp, gx = vjp(g_out)
                     return gp, gx
@@ -231,6 +301,95 @@ class PipelinedModel:
         cbs = [StageCallbacks(make_forward(j), make_backward(j), make_step(j))
                for j in range(c)]
         return cbs, result
+
+
+class EncDecPipelinedModel(PipelinedModel):
+    """Encoder-decoder stage layout over the same executor plumbing.
+
+    The model's ``2 · n_periods`` periods (encoder then decoder) split into
+    ``n_stages`` contiguous groups of ``k`` periods each; the enc/dec
+    boundary must land on a stage boundary (``n_periods % k == 0``), so
+    encoder periods occupy stages ``0..E-1`` and decoder periods (each with
+    its period-major cross-attention block) stages ``E..c-1``. Stage 0 owns
+    the embedding table; the first decoder stage owns a copy (decoder-side
+    lookup) and the last stage a third (tied LM head) — their gradients sum
+    in ``merge_stage_grads``. The final encoder output ``he`` is forwarded
+    along the pipe to every decoder stage as part of the ``(he, hd)``
+    payload; ``jax.vjp`` over the pair carries cross-attention gradients
+    back to the encoder stages through the ordinary grad channels.
+    """
+
+    _aux_keys = ("enc_positions", "enc_segment_ids", "dec_tokens",
+                 "dec_positions", "dec_segment_ids", "labels", "loss_weights")
+
+    def _init_layout(self):
+        cfg, n_stages = self.cfg, self.n_stages
+        self.k, self.n_enc_stages = self.layout(cfg, n_stages)
+        self._cache_ns = ("encdec", repr(cfg), n_stages, self.impl)
+        self._apply_fn = _encdec_stage_apply
+        self._apply_static = (cfg, self.k, n_stages, self.n_enc_stages,
+                              self.impl)
+
+    @staticmethod
+    def layout(cfg: ArchConfig, n_stages: int) -> tuple[int, int]:
+        """(periods per stage, number of encoder stages) — raises when the
+        2·n_periods total does not split evenly or a stage would straddle
+        the encoder/decoder boundary."""
+        total = 2 * cfg.n_periods
+        if n_stages < 2 or total % n_stages:
+            raise ValueError(
+                f"{cfg.name}: {total} enc+dec periods do not split over "
+                f"{n_stages} stages")
+        k = total // n_stages
+        if cfg.n_periods % k:
+            raise ValueError(
+                f"{cfg.name}: stage of {k} periods straddles the enc/dec "
+                f"boundary at period {cfg.n_periods}")
+        return k, cfg.n_periods // k
+
+    @staticmethod
+    def _batch_shape(b) -> tuple:
+        enc, dec = b["enc_tokens"], b["dec_tokens"]
+        return int(enc.shape[0]), int(enc.shape[1]), int(dec.shape[1])
+
+    # ------------------------- param slicing ---------------------------
+    def stage_params(self, j: int):
+        k, e = self.k, self.n_enc_stages
+        p: dict[str, Any] = {}
+        if j < e:
+            p["stack"] = jax.tree.map(lambda x: x[j * k : (j + 1) * k],
+                                      self.full_params["enc"])
+            if j == e - 1:
+                p["enc_norm"] = self.full_params["enc_norm"]
+        else:
+            dj = j - e
+            p["stack"] = jax.tree.map(lambda x: x[dj * k : (dj + 1) * k],
+                                      self.full_params["dec"])
+            p["cross"] = jax.tree.map(lambda x: x[dj * k : (dj + 1) * k],
+                                      self.full_params["cross"])
+            if j == self.n_stages - 1:
+                p["dec_norm"] = self.full_params["dec_norm"]
+        if j == 0 or j == e or j == self.n_stages - 1:
+            p["embed"] = self.full_params["embed"]
+        return p
+
+    def merge_stage_grads(self, stage_grads: list):
+        e = self.n_enc_stages
+        out = jax.tree.map(jnp.zeros_like, self.full_params)
+        out = dict(
+            out,
+            enc=jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                             *[g["stack"] for g in stage_grads[:e]]),
+            dec=jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                             *[g["stack"] for g in stage_grads[e:]]),
+            cross=jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                               *[g["cross"] for g in stage_grads[e:]]),
+        )
+        for g in stage_grads:
+            for key in ("embed", "enc_norm", "dec_norm"):
+                if key in g:
+                    out[key] = out[key] + g[key]
+        return out
 
 
 def _xent_sum(head_w, h, labels, weights, cfg: ArchConfig):

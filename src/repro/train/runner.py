@@ -47,9 +47,11 @@ from repro.data.dataset import materialize_micro_batch
 from repro.data.streams import GlobalBatch
 from repro.dist.fault import StragglerMonitor
 from repro.models import model as MD
+from repro.models import transformer as T
 from repro.train import checkpoint as CKPT
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
-from repro.train.pipeline_adapter import PipelinedModel, _xent_sum
+from repro.train.pipeline_adapter import (EncDecPipelinedModel,
+                                          PipelinedModel, _xent_sum)
 from repro.train.step_cache import CompiledStepCache
 
 
@@ -72,6 +74,27 @@ def build_grad_step(cfg: ArchConfig):
             h, _, _ = MD.forward(p_, batch, cfg, mode="train")
             return _xent_sum(p_.get("head", p_.get("embed")), h,
                              batch["labels"], batch["loss_weights"], cfg)
+        (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
+        return loss_sum, w_sum, g
+    return grad_mb
+
+
+def build_encdec_grad_step(cfg: ArchConfig):
+    """Sequential enc-dec training step: value_and_grad of the dec-side
+    summed xent through the ``encdec_fwd`` oracle (tied embedding head).
+    The enc-dec analogue of :func:`build_grad_step`."""
+
+    @jax.jit
+    def grad_mb(p, batch):
+        def f(p_):
+            hd = T.encdec_fwd(
+                p_, batch["enc_tokens"], batch["dec_tokens"], cfg,
+                enc_segments=batch["enc_segment_ids"],
+                dec_segments=batch["dec_segment_ids"],
+                enc_positions=batch["enc_positions"],
+                dec_positions=batch["dec_positions"])
+            return _xent_sum(p_["embed"], hd, batch["labels"],
+                             batch["loss_weights"], cfg)
         (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
         return loss_sum, w_sum, g
     return grad_mb
@@ -233,16 +256,32 @@ class PlanAheadRunner:
         return gb, plan, wait, it_plan.planning_seconds
 
     # ------------------------- execution side --------------------------
-    def _grad_fn(self, mbs: int, seq: int):
-        key = ("grad", model_cache_namespace(self.cfg), mbs, seq)
-        return self.step_cache.get(key, lambda: build_grad_step(self.cfg))
+    @property
+    def _encdec(self) -> bool:
+        return self.cfg.family == "encdec"
+
+    def _grad_fn(self, shape: tuple):
+        """shape: (mbs, seq) decoder-only or (mbs, enc, dec) enc-dec."""
+        key = ("grad", model_cache_namespace(self.cfg)) + shape
+        build = (build_encdec_grad_step if len(shape) == 3
+                 else build_grad_step)
+        return self.step_cache.get(key, lambda: build(self.cfg))
+
+    @staticmethod
+    def _batch_shape(b) -> tuple:
+        if "enc_tokens" in b:
+            return (int(b["enc_tokens"].shape[0]),
+                    int(b["enc_tokens"].shape[1]),
+                    int(b["dec_tokens"].shape[1]))
+        return int(b["tokens"].shape[0]), int(b["tokens"].shape[1])
 
     # ------------------------------ run --------------------------------
     def run(self):
         """Returns (params, history, stats: RunnerStats)."""
         rcfg, pcfg, cfg = self.rcfg, self.pcfg, self.cfg
         key = jax.random.PRNGKey(rcfg.seed)
-        params = MD.init_params(key, cfg)
+        params = (T.init_encdec(key, cfg) if self._encdec
+                  else MD.init_params(key, cfg))
         opt = init_opt_state(params, self.opt_cfg)
         start = 0
         if rcfg.ckpt_dir:
@@ -251,11 +290,21 @@ class PlanAheadRunner:
             if start:
                 params, opt = state["params"], state["opt"]
 
-        pipelined = (rcfg.use_executor and pcfg.n_stages > 1
-                     and cfg.n_periods % pcfg.n_stages == 0)
-        pm = (PipelinedModel(cfg, params, pcfg.n_stages,
-                             step_cache=self.step_cache)
-              if pipelined else None)
+        if self._encdec:
+            # total periods = enc + dec; the layout also requires the stage
+            # boundary to coincide with the enc/dec split
+            pipelined = rcfg.use_executor and pcfg.n_stages > 1 \
+                and (2 * cfg.n_periods) % pcfg.n_stages == 0 \
+                and cfg.n_periods % ((2 * cfg.n_periods) // pcfg.n_stages) == 0
+            pm = (EncDecPipelinedModel(cfg, params, pcfg.n_stages,
+                                       step_cache=self.step_cache)
+                  if pipelined else None)
+        else:
+            pipelined = (rcfg.use_executor and pcfg.n_stages > 1
+                         and cfg.n_periods % pcfg.n_stages == 0)
+            pm = (PipelinedModel(cfg, params, pcfg.n_stages,
+                                 step_cache=self.step_cache)
+                  if pipelined else None)
 
         end = start + rcfg.n_iters
         if not rcfg.synchronous:
@@ -275,7 +324,15 @@ class PlanAheadRunner:
                     self._submit(it + rcfg.lookahead)
                 gb, plan, wait_s, planning_s = self._obtain(it)
 
-                batches = {m.mb_id: materialize_micro_batch(m, gb.tokens)
+                if self._encdec and any(
+                        not isinstance(m.seq, (tuple, list))
+                        for m in plan.micro_batches):
+                    raise ValueError(
+                        "enc-dec model got a decoder-only micro-batch: the "
+                        "stream must carry (enc, dec) lengths with dec > 0 "
+                        "for every sample (use encdec_fraction=1.0)")
+                batches = {m.mb_id: materialize_micro_batch(
+                               m, gb.tokens, lengths=gb.lengths)
                            for m in plan.micro_batches}
                 if pipelined:
                     pm.set_params(params)
@@ -288,8 +345,8 @@ class PlanAheadRunner:
                     for mb_id in sorted(batches):
                         b = {k: jnp.asarray(v)
                              for k, v in batches[mb_id].items()}
-                        mbs, seq = b["tokens"].shape
-                        ls, ws, g = self._grad_fn(int(mbs), int(seq))(params, b)
+                        ls, ws, g = self._grad_fn(self._batch_shape(b))(
+                            params, b)
                         loss_sum += float(ls)
                         w_sum += float(ws)
                         grads = g if grads is None else jax.tree.map(

@@ -81,6 +81,59 @@ def test_ragged_attention(dtype, layout):
         atol=TOL[dtype], rtol=TOL[dtype])
 
 
+def test_ragged_attention_nondivisible_block():
+    """Regression: a bucketed seq length that the requested block does not
+    divide (e.g. palette bucket 768 under block 512 -> gcd 256) must shrink
+    the block instead of asserting."""
+    b, t, h, d = 1, 96, 2, 32          # 96 % 64 != 0 -> block becomes 32
+    q, k, v = _qkv(b, t, h, d, jnp.float32)
+    seg_row = np.r_[np.zeros(50), np.ones(30), -np.ones(16)]
+    segs = jnp.asarray(seg_row[None], jnp.int32)
+    out = ragged_attention(q, k, v, segs, segs, block_q=64, block_kv=64,
+                           interpret=True)
+    ref = attention_ref(q, k, v, q_segment_ids=segs, kv_segment_ids=segs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_ops_ragged_window_softcap_falls_back_to_ref():
+    """Regression: gemma2-style window/softcap configs over segmented
+    (packed) batches must not crash the ragged dispatch — they fall back to
+    the segment-masked jnp oracle."""
+    b, t, h, d = 2, 128, 2, 32
+    q, k, v = _qkv(b, t, h, d, jnp.float32)
+    seg_row = np.r_[np.zeros(64), np.ones(40), -np.ones(24)]
+    segs = jnp.asarray(np.stack([seg_row, np.zeros(t)]), jnp.int32)
+    for window, softcap in ((64, None), (0, 20.0), (64, 20.0)):
+        out = ops.attention(q, k, v, impl="interpret", window=window,
+                            softcap=softcap, q_segment_ids=segs,
+                            kv_segment_ids=segs)
+        ref = attention_ref(q, k, v, window=window, softcap=softcap,
+                            q_segment_ids=segs, kv_segment_ids=segs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_ops_one_sided_segment_ids_mask_all_impls():
+    """Regression: kv-only segment ids (cross-attention against padded
+    encoder keys, no decoder segments) must mask on every impl — the
+    missing side is synthesized as one all-zero segment."""
+    b, t, s, h, d = 1, 32, 64, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, t, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    kv_segs = jnp.asarray(np.r_[np.zeros(40), -np.ones(24)][None], jnp.int32)
+    q_zero = jnp.zeros((b, t), jnp.int32)
+    for impl in ("ref", "interpret"):
+        out = ops.attention(q, k, v, causal=False, impl=impl,
+                            kv_segment_ids=kv_segs)
+        ref = attention_ref(q, k, v, causal=False,
+                            q_segment_ids=q_zero, kv_segment_ids=kv_segs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)
+
+
 def test_ragged_blocks_isolated():
     """Cross-segment attention must be exactly zero: two segments with
     identical contents must produce identical per-segment outputs."""

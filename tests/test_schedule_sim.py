@@ -107,6 +107,35 @@ def test_cluster_permute_improves_or_equals():
     assert evaluate(best) <= evaluate(list(range(m))) + 1e-9
 
 
+def test_stage0_injection_pays_no_comm_latency():
+    """Regression: stage-0 forwards are host injections, not link hops —
+    they must start at t=0 even with nonzero comm latency (the bug inflated
+    every makespan the comm planner and cluster_permute searched over)."""
+    m, c, lat = 4, 3, 0.5
+    sim = simulate(schedule_1f1b(m, c), 1.0, 2.0, comm_latency=lat)
+    assert sim.start[(0, 0, "F")] == 0.0
+    # downstream forwards still pay the hop...
+    assert sim.start[(0, 1, "F")] >= sim.end[(0, 0, "F")] + lat
+    # ...and the last stage's backward consumes its own forward locally
+    assert sim.start[(0, c - 1, "B")] == sim.end[(0, c - 1, "F")]
+    # with zero latency the fix is a no-op on the textbook bound
+    base = simulate(schedule_1f1b(m, c), 1.0, 2.0)
+    expect = (c - 1) * 3.0 + m * 3.0
+    assert abs(base.makespan - expect) < 1e-9
+
+
+def test_cluster_permute_order_falls_back_when_all_infeasible():
+    """Regression: when evaluate never yields a finite makespan (e.g. every
+    injection order is memory-infeasible), return the unpermuted cluster
+    order instead of None."""
+    times = [3.0, 1.0, 2.0, 5.0, 4.0]
+    out = cluster_permute_order(times, 3, evaluate=lambda _: float("inf"))
+    assert out is not None
+    assert sorted(out) == list(range(len(times)))
+    out_nan = cluster_permute_order(times, 3, evaluate=lambda _: float("nan"))
+    assert sorted(out_nan) == list(range(len(times)))
+
+
 def test_simulator_deadlock_detection():
     # device 1 waits for mb1 forward before mb0 exists anywhere: fine order,
     # but a backward-before-forward order must deadlock.
