@@ -16,6 +16,18 @@ committed under ``benchmarks/baselines/`` and exits non-zero on regression:
   beat the padding baseline outright (the paper's headline claim; bench_e2e
   also enforces it at generation time). Absolute tokens/sec are printed
   for the log but not gated: they track runner hardware, not code.
+- **attention** (``BENCH_attention_smoke.json``): the *live-block
+  fraction* per kernel pass (fwd / bwd_dq / bwd_dkv — all three carry the
+  same per-pair predicate by construction, so the fractions coincide)
+  over planner-produced micro-batch shapes, plus the live-over-ideal work
+  multiple. These are evaluated analytically from the shared skip
+  predicate (``flash_attention.live_block_mask``) — fully deterministic
+  and machine-independent — so the gate is tight (1% drift): a rise means
+  the predicate itself, the planner, or the palette got worse at killing
+  blocks. That the compiled kernels *enforce* the predicate (fwd AND both
+  backward passes) is proven separately by the NaN-poisoning test
+  ``tests/test_kernel_grads.py::test_block_skip_survives_nan_in_dead_blocks``.
+  Timing entries in the JSON are informational only.
 
 Usage (CI runs exactly this, from the repo root, after the ``--smoke``
 benches):
@@ -121,6 +133,49 @@ def check_e2e(
     return failures
 
 
+def check_attention(baseline: dict, current: dict, tol: float = 0.01) -> list[str]:
+    failures = []
+    cur_by = {s["name"]: s for s in current.get("scenarios", [])}
+    for base in baseline.get("scenarios", []):
+        name = base["name"]
+        cur = cur_by.get(name)
+        if cur is None:
+            failures.append(f"attention scenario {name!r} missing from current run")
+            continue
+        for passname in ("fwd", "bwd_dq", "bwd_dkv"):
+            b_frac = base[passname]["live_fraction"]
+            c_frac = cur[passname]["live_fraction"]
+            bad = c_frac > b_frac * (1 + tol) + 1e-9
+            status = "FAIL" if bad else "ok"
+            print(
+                f"[{status}] attention {name}/{passname}: live fraction "
+                f"{c_frac:.4f} (baseline {b_frac:.4f})"
+            )
+            if bad:
+                failures.append(
+                    f"attention {name}/{passname}: live-block fraction rose "
+                    f"{c_frac:.4f} > {b_frac:.4f} — block skipping weakened"
+                )
+            if passname.startswith("bwd") and c_frac >= 1.0:
+                failures.append(
+                    f"attention {name}/{passname}: no blocks skipped in the "
+                    "backward pass at all"
+                )
+        b_ovr, c_ovr = base["live_over_ideal"], cur["live_over_ideal"]
+        bad = c_ovr > b_ovr * (1 + tol) + 1e-9
+        status = "FAIL" if bad else "ok"
+        print(
+            f"[{status}] attention {name}: live/ideal work multiple "
+            f"{c_ovr:.3f} (baseline {b_ovr:.3f})"
+        )
+        if bad:
+            failures.append(
+                f"attention {name}: live-over-ideal multiple rose "
+                f"{c_ovr:.3f} > {b_ovr:.3f}"
+            )
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -129,6 +184,11 @@ def main() -> int:
     ap.add_argument("--e2e", type=Path, default=REPO_ROOT / "BENCH_e2e_smoke.json")
     ap.add_argument(
         "--e2e-t5", type=Path, default=REPO_ROOT / "BENCH_e2e_t5_smoke.json"
+    )
+    ap.add_argument(
+        "--attention",
+        type=Path,
+        default=REPO_ROOT / "BENCH_attention_smoke.json",
     )
     ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
     ap.add_argument(
@@ -155,6 +215,10 @@ def main() -> int:
         _load(args.e2e_t5),
         args.factor,
         label="e2e-t5",
+    )
+    failures += check_attention(
+        _load(args.baseline_dir / "BENCH_attention_smoke.json"),
+        _load(args.attention),
     )
 
     if failures:

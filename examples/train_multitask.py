@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--processes", action="store_true",
                     help="PlannerPool process backend (true CPU overlap)")
     ap.add_argument("--lookahead", type=int, default=1)
+    ap.add_argument("--impl", default=None,
+                    choices=["pallas", "interpret", "ref"],
+                    help="kernel impl for every fwd/bwd step (default: "
+                         "kernels.default_impl(), i.e. pallas on TPU, ref "
+                         "elsewhere; REPRO_KERNEL_IMPL also overrides)")
     ap.add_argument("--ckpt-dir", default="/tmp/dynapipe_ckpt")
     args = ap.parse_args()
 
@@ -67,7 +72,7 @@ def main():
                          d_model=cfg.d_model, palette=palette)
     rcfg = RunnerConfig(n_iters=args.iters, lookahead=args.lookahead,
                         synchronous=args.sync, use_processes=args.processes,
-                        use_executor=args.stages > 1,
+                        use_executor=args.stages > 1, impl=args.impl,
                         ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
     runner = PlanAheadRunner(cfg, cost, pcfg, rcfg, stream,
                              opt_cfg=AdamWConfig(lr=3e-4))

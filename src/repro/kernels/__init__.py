@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas compute kernels (attention + SSD) with pure-jnp oracles.
+
+``ops`` is the dispatch layer (impl in {"pallas", "interpret", "ref"},
+default from :func:`default_impl`, overridable via the
+``REPRO_KERNEL_IMPL`` environment variable). The attention kernels train
+through fused custom-VJP backward passes; ``ref`` stays the ground-truth
+oracle and the XLA-visible FLOP-counting path for the dry-run.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    attention,
+    default_impl,
+    ssd,
+    ssd_decode,
+)

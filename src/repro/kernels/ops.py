@@ -3,15 +3,25 @@
 ``impl`` selects the compute path:
   - "pallas"     : pl.pallas_call targeting TPU (the production path)
   - "interpret"  : same kernel body, interpreted on CPU (used by tests)
-  - "ref"        : pure-jnp oracle — used (a) as ground truth, (b) for the
-                   dry-run/roofline lowering, where XLA must see the FLOPs
-                   (custom calls are opaque to cost_analysis), and (c) under
-                   vmap/grad where the kernels don't define batching/VJPs.
+  - "ref"        : pure-jnp oracle — used (a) as ground truth, and (b) for
+                   the dry-run/roofline lowering, where XLA must see the
+                   FLOPs (custom calls are opaque to cost_analysis).
 
-The default comes from ``repro.kernels.default_impl()`` which picks "pallas"
-on TPU backends and "ref" elsewhere.
+The kernel paths carry ``jax.custom_vjp`` fused backward passes, so
+``impl`` is *sticky under grad*: training steps differentiate straight
+through the Pallas kernels instead of silently re-tracing the quadratic
+``ref`` oracle. GQA k/v heads are consumed natively by the kernels (index
+maps address ``q_head // group``) — no head-repetition materializes here.
+
+The default comes from ``repro.kernels.default_impl()`` which picks
+"pallas" on TPU backends and "ref" elsewhere; the ``REPRO_KERNEL_IMPL``
+environment variable overrides it (benches/CI force ``pallas`` /
+``interpret`` / ``ref`` without threading ``impl`` through every call
+site).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +31,16 @@ from repro.kernels import ragged_attention as _ra
 from repro.kernels import ssd as _ssd
 from repro.kernels import ref as _ref
 
+_IMPLS = ("pallas", "interpret", "ref")
+
 
 def default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL", "").strip().lower()
+    if env:
+        if env not in _IMPLS:
+            raise ValueError(
+                f"REPRO_KERNEL_IMPL={env!r} not in {_IMPLS}")
+        return env
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
@@ -38,14 +56,17 @@ def attention(
     block_q=512, block_kv=512, impl: str | None = None,
     chunk_strategy: str = "q",
 ):
-    """Multi-head attention entry point. k/v carry KV heads (GQA repeats here).
+    """Multi-head attention entry point. k/v carry KV heads; every impl
+    consumes GQA natively (the ref oracle repeats heads internally, the
+    kernels address kv heads through their index maps — nothing repeated
+    in HBM).
 
     chunk_strategy (ref path, long sequences): "q" scans query blocks
     (head-parallel attention), "head" scans head blocks (sequence-parallel
     attention, where the q seq dim is mesh-sharded and must not be scanned).
     """
     impl = _resolve(impl)
-    h, kvh = q.shape[2], k.shape[2]
+    h = q.shape[2]
     if (q_segment_ids is None) != (kv_segment_ids is None):
         # one-sided segment ids (e.g. cross-attention with padded encoder
         # keys but no decoder segments): synthesize the missing side as one
@@ -56,17 +77,20 @@ def attention(
         else:
             kv_segment_ids = jnp.zeros(k.shape[:2], jnp.int32)
     ragged = q_segment_ids is not None
-    if ragged and (window != 0 or softcap is not None):
-        # the ragged Pallas kernel only implements plain (causal) softmax;
-        # gemma2-style window/softcap configs over packed/segmented batches
-        # route to the segment-masked jnp oracle instead of crashing
-        impl = "ref"
     if impl == "ref":
-        big = q.shape[1] * k.shape[1] * h >= 2048 * 2048 * 8
+        # score-matrix element count decides chunking; batch rows multiply
+        # the working set exactly like heads do, so B is part of the bound
+        # (large-batch short-seq micro-batches must not take the
+        # materialize-everything path)
+        big = q.shape[0] * q.shape[1] * k.shape[1] * h >= 2048 * 2048 * 8
         if big and chunk_strategy == "head":
             fn = _ref.attention_ref_headchunked
         elif big and q.shape[1] >= 2048:
             fn = _ref.attention_ref_chunked
+        elif big:
+            # large-batch short-seq: per-row (T, S) blocks are small but
+            # there are many rows — chunk over the batch instead
+            fn = _ref.attention_ref_batchchunked
         else:
             fn = _ref.attention_ref
         return fn(
@@ -75,16 +99,15 @@ def attention(
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
         )
     interpret = impl == "interpret"
-    kr = _ref._repeat_kv(k, h // kvh)
-    vr = _ref._repeat_kv(v, h // kvh)
     if ragged:
         return _ra.ragged_attention(
-            q, kr, vr, q_segment_ids, kv_segment_ids, causal=causal,
+            q, k, v, q_segment_ids, kv_segment_ids, causal=causal,
+            window=window, softcap=softcap,
             q_positions=q_positions, kv_positions=kv_positions,
             block_q=block_q, block_kv=block_kv, interpret=interpret,
         )
     return _fa.flash_attention(
-        q, kr, vr, causal=causal, window=window, softcap=softcap,
+        q, k, v, causal=causal, window=window, softcap=softcap,
         q_positions=q_positions, kv_positions=kv_positions,
         block_q=block_q, block_kv=block_kv, interpret=interpret,
     )

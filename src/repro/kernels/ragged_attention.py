@@ -12,98 +12,71 @@ per-token *segment ids* mark sample boundaries, and
   2. mixed boundary blocks apply an exact element-wise segment mask;
   3. padding tokens carry segment id -1 and are masked from both sides.
 
-Same online-softmax structure, scratch carries, and BlockSpec tiling as
-``flash_attention.py`` (see that module for the VMEM budget math).
+Forward, fused backward (``jax.custom_vjp``), sliding-window and
+logit-softcap masking (gemma2-style packed batches), and GQA-native
+indexing are all shared with ``flash_attention.py`` — this module binds
+the segmented variant of the same kernel bodies, so the backward carries
+the identical segment-range block-skip predicate (cross-sample blocks are
+skipped in *both* passes, where they cost twice what they do in forward).
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.flash_attention import (
+    NEG_INF,            # noqa: F401  (re-exported for callers/tests)
+    _int_ct,
+    live_block_mask,    # noqa: F401  (segment-aware liveness, re-exported)
+    mha_backward,
+    mha_forward,
+    shrink_block,
+)
 
 
-def _ragged_kernel(
-    qpos_ref,        # (1, block_q)  int32
-    kpos_ref,        # (1, block_kv) int32
-    qseg_ref,        # (1, block_q)  int32
-    kseg_ref,        # (1, block_kv) int32
-    q_ref,           # (1, block_q, d)
-    k_ref,           # (1, block_kv, d)
-    v_ref,           # (1, block_kv, d)
-    o_ref,           # (1, block_q, d)
-    m_ref,
-    l_ref,
-    acc_ref,
-    *,
-    causal: bool,
-    sm_scale: float,
-    n_kv_blocks: int,
-):
-    kv_idx = pl.program_id(2)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12))
+def _ragged(q, k, v, qseg, kseg, qpos, kpos, causal, window, softcap,
+            block_q, block_kv, interpret):
+    o, _ = mha_forward(q, k, v, qpos, kpos, qseg, kseg, causal=causal,
+                       window=window, softcap=softcap, block_q=block_q,
+                       block_kv=block_kv, interpret=interpret)
+    return o
 
-    @pl.when(kv_idx == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    qpos, kpos = qpos_ref[0], kpos_ref[0]
-    qseg, kseg = qseg_ref[0], kseg_ref[0]
+def _ragged_fwd(q, k, v, qseg, kseg, qpos, kpos, causal, window, softcap,
+                block_q, block_kv, interpret):
+    o, lse = mha_forward(q, k, v, qpos, kpos, qseg, kseg, causal=causal,
+                         window=window, softcap=softcap, block_q=block_q,
+                         block_kv=block_kv, interpret=interpret)
+    return o, (q, k, v, qseg, kseg, qpos, kpos, o, lse)
 
-    # Block skipping: segments are laid out contiguously => segment ids are
-    # non-decreasing along the sequence, so two blocks interact iff their
-    # [min, max] segment ranges overlap (and, for causal, kv isn't entirely
-    # in the future). Padding (-1) never matches a valid q segment.
-    q_smin, q_smax = jnp.min(qseg), jnp.max(qseg)
-    k_smin, k_smax = jnp.min(kseg), jnp.max(kseg)
-    live = (q_smax >= k_smin) & (k_smax >= q_smin) & (k_smax >= 0) & (q_smax >= 0)
-    if causal:
-        live &= jnp.max(qpos) >= jnp.min(kpos)
 
-    @pl.when(live)
-    def _compute():
-        q = q_ref[0].astype(jnp.float32)
-        k = k_ref[0].astype(jnp.float32)
-        v = v_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * sm_scale
-        mask = (qseg[:, None] == kseg[None, :]) & (kseg[None, :] >= 0)
-        if causal:
-            mask &= (qpos[:, None] - kpos[None, :]) >= 0
-        s = jnp.where(mask, s, NEG_INF)
+def _ragged_bwd(causal, window, softcap, block_q, block_kv, interpret,
+                res, do):
+    q, k, v, qseg, kseg, qpos, kpos, o, lse = res
+    dq, dk, dv = mha_backward(
+        q, k, v, qpos, kpos, qseg, kseg, o, lse, do,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return (dq, dk, dv, _int_ct(qseg), _int_ct(kseg),
+            _int_ct(qpos), _int_ct(kpos))
 
-        m_prev = m_ref[...]
-        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        # all-masked rows keep m == NEG_INF; normalize against that
-        alpha = jnp.exp(m_prev - m_cur)
-        p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        m_ref[...] = m_cur
 
-    @pl.when(kv_idx == n_kv_blocks - 1)
-    def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+_ragged.defvjp(_ragged_fwd, _ragged_bwd)
 
 
 def ragged_attention(
     q: jax.Array,                  # (B, T, H, D)
-    k: jax.Array,                  # (B, S, H, D)
-    v: jax.Array,                  # (B, S, H, D)
+    k: jax.Array,                  # (B, S, KV, D)  (GQA-native: KV <= H)
+    v: jax.Array,                  # (B, S, KV, D)
     q_segment_ids: jax.Array,      # (B, T) int32, -1 = padding
     kv_segment_ids: jax.Array,     # (B, S) int32
     *,
     causal: bool = True,
+    window: int = 0,
+    softcap: float | None = None,
     q_positions: jax.Array | None = None,
     kv_positions: jax.Array | None = None,
     block_q: int = 512,
@@ -111,57 +84,17 @@ def ragged_attention(
     interpret: bool = False,
 ) -> jax.Array:
     b, t, h, d = q.shape
-    s = k.shape[1]
-    # Blocks must tile the sequence exactly. When a bucketed length is not a
-    # multiple of the requested block (e.g. palette bucket 768 with block
-    # 512), shrink to the gcd: the largest divisor of the length that also
-    # divides the request, so alignment factors (128/64/32 buckets) survive.
-    block_q = min(block_q, t)
-    block_kv = min(block_kv, s)
-    if t % block_q:
-        block_q = math.gcd(t, block_q)
-    if s % block_kv:
-        block_kv = math.gcd(s, block_kv)
-    nq, nk = t // block_q, s // block_kv
-
+    s, kvh = k.shape[1], k.shape[2]
+    assert k.shape == (b, s, kvh, d) and v.shape == (b, s, kvh, d)
+    assert h % kvh == 0, (h, kvh)
+    block_q = shrink_block(t, block_q)
+    block_kv = shrink_block(s, block_kv)
     if q_positions is None:
         q_positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
     if kv_positions is None:
         kv_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-
-    qr = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
-    kr = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    vr = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    qp = jnp.repeat(q_positions.astype(jnp.int32), h, axis=0)
-    kp = jnp.repeat(kv_positions.astype(jnp.int32), h, axis=0)
-    qs = jnp.repeat(q_segment_ids.astype(jnp.int32), h, axis=0)
-    ks = jnp.repeat(kv_segment_ids.astype(jnp.int32), h, axis=0)
-
-    kernel = functools.partial(
-        _ragged_kernel,
-        causal=causal,
-        sm_scale=1.0 / math.sqrt(d),
-        n_kv_blocks=nk,
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid=(b * h, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q), lambda bh, iq, ik: (bh, iq)),
-            pl.BlockSpec((1, block_kv), lambda bh, iq, ik: (bh, ik)),
-            pl.BlockSpec((1, block_q), lambda bh, iq, ik: (bh, iq)),
-            pl.BlockSpec((1, block_kv), lambda bh, iq, ik: (bh, ik)),
-            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda bh, iq, ik: (bh, ik, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda bh, iq, ik: (bh, ik, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qp, kp, qs, ks, qr, kr, vr)
-    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)
+    return _ragged(q, k, v, q_segment_ids.astype(jnp.int32),
+                   kv_segment_ids.astype(jnp.int32),
+                   q_positions.astype(jnp.int32),
+                   kv_positions.astype(jnp.int32), causal, int(window),
+                   softcap, block_q, block_kv, interpret)

@@ -74,6 +74,49 @@ def attention_ref(
     return out.astype(q.dtype)
 
 
+def attention_ref_lse(
+    q: jax.Array,                 # (B, T, H, D)
+    k: jax.Array,                 # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float | None = None,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    q_segment_ids: jax.Array | None = None,
+    kv_segment_ids: jax.Array | None = None,
+) -> jax.Array:
+    """Masked per-row log-sum-exp of the attention logits, (B, H, T) fp32 —
+    the oracle for the residual the Pallas forward saves for its backward.
+    Rows with no unmasked key return the kernels' -inf sentinel (~NEG_INF)."""
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = jnp.ones((b, t, s), dtype=bool)
+    dpos = q_positions[:, :, None] - kv_positions[:, None, :]
+    if causal:
+        mask &= dpos >= 0
+        if window > 0:
+            mask &= dpos < window
+    if q_segment_ids is not None and kv_segment_ids is not None:
+        mask &= q_segment_ids[:, :, None] == kv_segment_ids[:, None, :]
+        mask &= kv_segment_ids[:, None, :] >= 0
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    l = jnp.sum(jnp.where(mask[:, None, :, :],
+                          jnp.exp(scores - m[..., None]), 0.0), axis=-1)
+    return m + jnp.log(jnp.maximum(l, 1e-30))
+
+
 def attention_ref_chunked(
     q, k, v, *,
     causal=True, window=0, softcap=None,
@@ -117,6 +160,58 @@ def attention_ref_chunked(
         qsegs = q_segment_ids.reshape(b, n, block_q).swapaxes(0, 1)
     _, out = jax.lax.scan(jax.checkpoint(body), (), (qs, qps, qsegs))
     return out.swapaxes(0, 1).reshape(b, t, h, d)
+
+
+def attention_ref_batchchunked(
+    q, k, v, *,
+    causal=True, window=0, softcap=None,
+    q_positions=None, kv_positions=None,
+    q_segment_ids=None, kv_segment_ids=None,
+    elem_budget: int = 2048 * 2048 * 8,
+):
+    """Chunked over *batch rows*: the path for large-batch short-sequence
+    micro-batches, where the (B, H, T, S) score tensor is big but no single
+    row's (T, S) block is — q-block chunking can't help there (T is below
+    its block size), so scan row groups instead. Same semantics as
+    :func:`attention_ref`."""
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    rows = max(1, elem_budget // max(t * s * h, 1))
+    block_b = 1
+    for cand in range(1, b + 1):          # largest divisor of b <= rows
+        if b % cand == 0 and cand <= rows:
+            block_b = cand
+    if block_b >= b:
+        return attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if q_segment_ids is None or kv_segment_ids is None:
+        # attention_ref ignores a one-sided segment arg; all-zero segments
+        # reproduce that (no masking) while keeping the scan xs uniform
+        q_segment_ids = jnp.zeros((b, t), jnp.int32)
+        kv_segment_ids = jnp.zeros((b, s), jnp.int32)
+    nb = b // block_b
+
+    def chunk(x):  # (B, ...) -> (nb, block_b, ...)
+        return x.reshape(nb, block_b, *x.shape[1:])
+
+    def body(_, xs):
+        qc, kc, vc, qp, kp, qs_, ks_ = xs
+        out = attention_ref(
+            qc, kc, vc, causal=causal, window=window, softcap=softcap,
+            q_positions=qp, kv_positions=kp,
+            q_segment_ids=qs_, kv_segment_ids=ks_)
+        return (), out
+
+    xs = tuple(chunk(x) for x in (q, k, v, q_positions, kv_positions,
+                                  q_segment_ids, kv_segment_ids))
+    _, out = jax.lax.scan(jax.checkpoint(body), (), xs)
+    return out.reshape(b, t, h, d)
 
 
 # ----------------------------------------------------------------------

@@ -11,6 +11,12 @@ so GSPMD propagates DP/TP/SP placements from those anchors.
 
 dtype policy: params bf16 (cfg.dtype), math that needs it (softmax, norms,
 SSM recurrences, loss) in fp32.
+
+Kernel contract: ``ops.attention`` consumes GQA k/v heads natively (no
+head repetition here or in the kernels) and is differentiable on every
+impl — the Pallas kernels carry fused custom-VJP backwards, so the
+``impl`` a caller selects stays in force under ``jax.grad`` (``ref``
+remains the oracle and the dry-run/FLOP-counting path).
 """
 from __future__ import annotations
 

@@ -63,15 +63,21 @@ def model_cache_namespace(cfg: ArchConfig) -> str:
     return repr(cfg)
 
 
-def build_grad_step(cfg: ArchConfig):
+def build_grad_step(cfg: ArchConfig, impl: Optional[str] = None):
     """The sequential-path training step: jitted value_and_grad of the
     summed xent over one micro-batch. Shared by the runner and
-    benchmarks/bench_e2e.py so benches measure exactly the system's math."""
+    benchmarks/bench_e2e.py so benches measure exactly the system's math.
+
+    ``impl`` pins the kernel path (pallas/interpret/ref) for forward AND
+    backward — the attention kernels carry custom VJPs, so grad steps stay
+    on the selected kernels instead of falling back to the jnp oracle.
+    ``None`` defers to ``repro.kernels.default_impl()`` (which honours the
+    ``REPRO_KERNEL_IMPL`` env override)."""
 
     @jax.jit
     def grad_mb(p, batch):
         def f(p_):
-            h, _, _ = MD.forward(p_, batch, cfg, mode="train")
+            h, _, _ = MD.forward(p_, batch, cfg, mode="train", impl=impl)
             return _xent_sum(p_.get("head", p_.get("embed")), h,
                              batch["labels"], batch["loss_weights"], cfg)
         (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
@@ -79,7 +85,7 @@ def build_grad_step(cfg: ArchConfig):
     return grad_mb
 
 
-def build_encdec_grad_step(cfg: ArchConfig):
+def build_encdec_grad_step(cfg: ArchConfig, impl: Optional[str] = None):
     """Sequential enc-dec training step: value_and_grad of the dec-side
     summed xent through the ``encdec_fwd`` oracle (tied embedding head).
     The enc-dec analogue of :func:`build_grad_step`."""
@@ -92,7 +98,7 @@ def build_encdec_grad_step(cfg: ArchConfig):
                 enc_segments=batch["enc_segment_ids"],
                 dec_segments=batch["dec_segment_ids"],
                 enc_positions=batch["enc_positions"],
-                dec_positions=batch["dec_positions"])
+                dec_positions=batch["dec_positions"], impl=impl)
             return _xent_sum(p_["embed"], hd, batch["labels"],
                              batch["loss_weights"], cfg)
         (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
@@ -112,6 +118,9 @@ class RunnerConfig:
     ckpt_dir: str = ""
     seed: int = 0
     plan_timeout: float = 300.0
+    impl: Optional[str] = None       # kernel impl for every fwd/bwd step
+                                     # (None = kernels.default_impl(), which
+                                     # honours REPRO_KERNEL_IMPL)
 
 
 class DatasetStream:
@@ -262,10 +271,11 @@ class PlanAheadRunner:
 
     def _grad_fn(self, shape: tuple):
         """shape: (mbs, seq) decoder-only or (mbs, enc, dec) enc-dec."""
-        key = ("grad", model_cache_namespace(self.cfg)) + shape
+        impl = self.rcfg.impl
+        key = ("grad", model_cache_namespace(self.cfg), impl) + shape
         build = (build_encdec_grad_step if len(shape) == 3
                  else build_grad_step)
-        return self.step_cache.get(key, lambda: build(self.cfg))
+        return self.step_cache.get(key, lambda: build(self.cfg, impl=impl))
 
     @staticmethod
     def _batch_shape(b) -> tuple:
@@ -297,12 +307,14 @@ class PlanAheadRunner:
                 and (2 * cfg.n_periods) % pcfg.n_stages == 0 \
                 and cfg.n_periods % ((2 * cfg.n_periods) // pcfg.n_stages) == 0
             pm = (EncDecPipelinedModel(cfg, params, pcfg.n_stages,
+                                       impl=rcfg.impl,
                                        step_cache=self.step_cache)
                   if pipelined else None)
         else:
             pipelined = (rcfg.use_executor and pcfg.n_stages > 1
                          and cfg.n_periods % pcfg.n_stages == 0)
             pm = (PipelinedModel(cfg, params, pcfg.n_stages,
+                                 impl=rcfg.impl,
                                  step_cache=self.step_cache)
                   if pipelined else None)
 

@@ -81,14 +81,38 @@ def test_ragged_attention(dtype, layout):
         atol=TOL[dtype], rtol=TOL[dtype])
 
 
-def test_ragged_attention_nondivisible_block():
+@pytest.mark.parametrize("fn", [ragged_attention, flash_attention])
+def test_attention_nondivisible_block(fn):
     """Regression: a bucketed seq length that the requested block does not
     divide (e.g. palette bucket 768 under block 512 -> gcd 256) must shrink
-    the block instead of asserting."""
+    the block instead of asserting — on BOTH kernel paths (flash used to
+    hard-assert ``t % block_q == 0``)."""
     b, t, h, d = 1, 96, 2, 32          # 96 % 64 != 0 -> block becomes 32
     q, k, v = _qkv(b, t, h, d, jnp.float32)
     seg_row = np.r_[np.zeros(50), np.ones(30), -np.ones(16)]
     segs = jnp.asarray(seg_row[None], jnp.int32)
+    if fn is ragged_attention:
+        out = fn(q, k, v, segs, segs, block_q=64, block_kv=64,
+                 interpret=True)
+        ref = attention_ref(q, k, v, q_segment_ids=segs, kv_segment_ids=segs)
+    else:
+        out = fn(q, k, v, block_q=64, block_kv=64, interpret=True)
+        ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("kv", [1, 2])
+def test_kernels_gqa_native(kv):
+    """The kernels consume kv heads directly (index maps address
+    ``q_head // group``) — no pre-repeated K/V input."""
+    b, t, h, d = 2, 128, 4, 32
+    q, k, v = _qkv(b, t, h, d, jnp.float32, kv=kv)
+    out = flash_attention(q, k, v, block_q=64, block_kv=64, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    segs = jnp.zeros((b, t), jnp.int32)
     out = ragged_attention(q, k, v, segs, segs, block_q=64, block_kv=64,
                            interpret=True)
     ref = attention_ref(q, k, v, q_segment_ids=segs, kv_segment_ids=segs)
@@ -96,10 +120,10 @@ def test_ragged_attention_nondivisible_block():
                                atol=3e-5, rtol=3e-5)
 
 
-def test_ops_ragged_window_softcap_falls_back_to_ref():
-    """Regression: gemma2-style window/softcap configs over segmented
-    (packed) batches must not crash the ragged dispatch — they fall back to
-    the segment-masked jnp oracle."""
+def test_ops_ragged_window_softcap_kernel():
+    """gemma2-style window/softcap configs over segmented (packed) batches
+    run the ragged Pallas kernel (they used to fall back to the jnp
+    oracle) and still match it."""
     b, t, h, d = 2, 128, 2, 32
     q, k, v = _qkv(b, t, h, d, jnp.float32)
     seg_row = np.r_[np.zeros(64), np.ones(40), -np.ones(24)]
@@ -226,8 +250,13 @@ def test_ops_dispatch_gqa():
 
 
 def test_kernel_grads_flow():
-    """Oracle paths are differentiable (kernels train through ref VJPs)."""
+    """Both the oracle and the kernel path are differentiable — the kernels
+    through their fused custom-VJP backward (see test_kernel_grads.py for
+    the full property matrix)."""
     b, t, h, d = 1, 64, 2, 16
     q, k, v = _qkv(b, t, h, d, jnp.float32)
-    g = jax.grad(lambda q: ops.attention(q, k, v, impl="ref").sum())(q)
-    assert np.isfinite(np.asarray(g)).all()
+    for impl in ("ref", "interpret"):
+        g = jax.grad(
+            lambda q: ops.attention(q, k, v, impl=impl,
+                                    block_q=16, block_kv=16).sum())(q)
+        assert np.isfinite(np.asarray(g)).all()

@@ -66,7 +66,7 @@ def test_step_cache_bounded_by_palette():
     grad_keys = {k for k in cache.keys() if k[0] == "grad"}
     assert all(
         (mbs in PAL.mbs_buckets and seq in PAL.seq_buckets)
-        for _, _ns, mbs, seq in grad_keys)
+        for _, _ns, _impl, mbs, seq in grad_keys)
     assert stats.cache["hit_rate"] >= 0.5, stats.cache
     assert cache.hits + cache.misses == sum(h["n_micro"] for h in history)
 
