@@ -28,6 +28,13 @@ committed under ``benchmarks/baselines/`` and exits non-zero on regression:
   backward passes) is proven separately by the NaN-poisoning test
   ``tests/test_kernel_grads.py::test_block_skip_survives_nan_in_dead_blocks``.
   Timing entries in the JSON are informational only.
+- **elastic** (``BENCH_elastic_smoke.json``): the fault-tolerance loop
+  (benchmarks/bench_elastic.py). Machine-independent hard invariants —
+  the recovered loss trajectory must match fault-free to 1%, every
+  declared fault must fire, and online calibration must reduce the
+  cost-model error — plus the faulted/fault-free throughput ratio
+  (machine-normalized, both runs on the same box) gated at ``--factor``.
+  Absolute recovery seconds are informational.
 
 Usage (CI runs exactly this, from the repo root, after the ``--smoke``
 benches):
@@ -176,6 +183,66 @@ def check_attention(baseline: dict, current: dict, tol: float = 0.01) -> list[st
     return failures
 
 
+def check_elastic(baseline: list, current: list, factor: float) -> list[str]:
+    failures = []
+    cur_by = {r["mode"]: r for r in current}
+    base_by = {r["mode"]: r for r in baseline}
+    for mode in ("fault_free", "faulted", "calibration", "_summary"):
+        if mode not in cur_by:
+            failures.append(f"elastic record {mode!r} missing from current run")
+    if failures:
+        return failures
+    cur, base = cur_by["_summary"], base_by.get("_summary", {})
+
+    # informational: absolute recovery seconds track runner hardware
+    print(
+        f"[info] elastic: {cur['n_recoveries']} recoveries in "
+        f"{cur['recovery_s']:.3f}s, kinds "
+        f"{cur_by['faulted'].get('recovery_kinds')} "
+        f"(absolute numbers not gated)"
+    )
+
+    # hard invariants, machine-independent
+    traj = cur["trajectory_max_rel_err"]
+    status = "FAIL" if traj > 1e-2 else "ok"
+    print(f"[{status}] elastic recovered-trajectory max rel err "
+          f"{traj:.2e} (limit 1e-2)")
+    if traj > 1e-2:
+        failures.append(
+            f"elastic: recovered loss trajectory diverged from fault-free "
+            f"({traj:.2e} > 1e-2)"
+        )
+    if cur_by["faulted"].get("faults_pending", 0) != 0:
+        failures.append("elastic: declared faults never fired")
+    cal = cur["calibration_err_ratio"]
+    status = "FAIL" if cal >= 1.0 else "ok"
+    print(f"[{status}] elastic calibration err_last/err_first = {cal:.3f} "
+          f"(must be < 1)")
+    if cal >= 1.0:
+        failures.append(
+            f"elastic: online calibration no longer reduces cost-model "
+            f"error (ratio {cal:.3f})"
+        )
+
+    # machine-normalized throughput-under-faults ratio vs baseline
+    ratio = cur["faulted_over_fault_free"]
+    base_ratio = base.get("faulted_over_fault_free")
+    if base_ratio:
+        degraded = base_ratio / max(ratio, 1e-9)
+        status = "FAIL" if degraded > factor else "ok"
+        print(
+            f"[{status}] elastic faulted/fault-free throughput {ratio:.2f}x "
+            f"(baseline {base_ratio:.2f}x, degradation {degraded:.2f}x, "
+            f"limit {factor:.1f}x)"
+        )
+        if degraded > factor:
+            failures.append(
+                f"elastic: throughput-under-faults ratio degraded "
+                f"{degraded:.2f}x (> {factor:.1f}x)"
+            )
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -189,6 +256,9 @@ def main() -> int:
         "--attention",
         type=Path,
         default=REPO_ROOT / "BENCH_attention_smoke.json",
+    )
+    ap.add_argument(
+        "--elastic", type=Path, default=REPO_ROOT / "BENCH_elastic_smoke.json"
     )
     ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
     ap.add_argument(
@@ -219,6 +289,11 @@ def main() -> int:
     failures += check_attention(
         _load(args.baseline_dir / "BENCH_attention_smoke.json"),
         _load(args.attention),
+    )
+    failures += check_elastic(
+        _load(args.baseline_dir / "BENCH_elastic_smoke.json"),
+        _load(args.elastic),
+        args.factor,
     )
 
     if failures:

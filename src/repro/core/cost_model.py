@@ -113,6 +113,37 @@ class CostModel:
     def stage_act_memory(self, mbs: int, seq, tp: int = 1) -> float:
         raise NotImplementedError
 
+    # ----------------------- online calibration ------------------------
+    # Models that expose learned ``fwd_scale``/``bwd_scale`` floats (both
+    # concrete models below do) self-calibrate from measured stage timings.
+    # A scale of exactly 1.0 is a bit-exact no-op (IEEE x*1.0 == x), so an
+    # uncalibrated model plans identically to one without scales at all.
+    def update(self, mbs: int, seq, fwd_s=None, bwd_s=None,
+               ema: float = 0.25) -> None:
+        """EMA the learned scales toward measured/predicted timing ratios.
+
+        ``fwd_s``/``bwd_s`` are measured stage seconds for shape
+        ``(mbs, seq)``; either may be None. No-op on models without scales.
+        Ratios are clamped to [0.05, 20] so one outlier measurement (GC
+        pause, page fault) cannot wreck the plan quality.
+        """
+        if not hasattr(self, "fwd_scale") or not hasattr(self, "bwd_scale"):
+            return
+        if fwd_s is not None and fwd_s > 0.0:
+            base = self.stage_fwd_time(mbs, seq) / self.fwd_scale
+            if base > 0.0:
+                r = min(20.0, max(0.05, float(fwd_s) / base))
+                self.fwd_scale = (1.0 - ema) * self.fwd_scale + ema * r
+        if bwd_s is not None and bwd_s > 0.0:
+            base = self.stage_bwd_time(mbs, seq) / self.bwd_scale
+            if base > 0.0:
+                r = min(20.0, max(0.05, float(bwd_s) / base))
+                self.bwd_scale = (1.0 - ema) * self.bwd_scale + ema * r
+
+    def scales(self) -> dict:
+        return {"fwd_scale": getattr(self, "fwd_scale", 1.0),
+                "bwd_scale": getattr(self, "bwd_scale", 1.0)}
+
     def stage_times_batch(self, mbs, seq, tp: int = 1):
         """Batched costs: ``(t_fwd[], t_bwd[], mem[])`` for k shapes.
 
@@ -145,6 +176,10 @@ class AnalyticCostModel(CostModel):
         # (core/recompute.py) — a plain field keeps the model picklable for
         # process-pool planning.
         self.bwd_mult = bwd_mult
+        # learned per-term calibration (CostModel.update); plain floats keep
+        # the model picklable, and 1.0 is a bit-exact identity
+        self.fwd_scale = 1.0
+        self.bwd_scale = 1.0
 
     # -------------------- flops / bytes per layer ----------------------
     def _layer_flops_per_seq(self, mbs: int, seq: int, spec) -> float:
@@ -230,10 +265,11 @@ class AnalyticCostModel(CostModel):
         fl, by = fl * layers / tp, by * layers / tp
         t = max(fl / (self.hw.peak_flops * self.hw.efficiency),
                 by / (self.hw.hbm_bw * self.hw.efficiency))
-        return t + self.hw.per_op_overhead
+        return (t + self.hw.per_op_overhead) * self.fwd_scale
 
     def stage_bwd_time(self, mbs: int, seq, tp: int = 1) -> float:
-        return self.bwd_mult * (2.0 * self.stage_fwd_time(mbs, seq, tp))
+        return self.bwd_scale * (self.bwd_mult
+                                 * (2.0 * self.stage_fwd_time(mbs, seq, tp)))
 
     def stage_act_memory(self, mbs: int, seq, tp: int = 1) -> float:
         enc, dec = self._norm_seq(seq)
@@ -330,8 +366,8 @@ class AnalyticCostModel(CostModel):
         fl, by = fl * layers / tp, by * layers / tp
         tf = np.maximum(fl / (self.hw.peak_flops * self.hw.efficiency),
                         by / (self.hw.hbm_bw * self.hw.efficiency))
-        tf = tf + self.hw.per_op_overhead
-        tb = self.bwd_mult * (2.0 * tf)
+        tf = (tf + self.hw.per_op_overhead) * self.fwd_scale
+        tb = self.bwd_scale * (self.bwd_mult * (2.0 * tf))
         tokens = (mu * (encu + decu)).astype(np.float64)
         per_layer = {"full": 2.0, "selective": 8.0, "none": 20.0}[self.remat]
         mem = tokens * self.cfg.d_model * 2 * per_layer * layers / tp
@@ -352,6 +388,11 @@ class ProfiledCostModel(CostModel):
         # reads these instead of recomputing np.log2(grid) per call
         self._log2_mbs_grid = np.log2(self.mbs_grid)
         self._log2_seq_grid = np.log2(self.seq_grid)
+        # learned calibration on top of the offline profile (CostModel.update)
+        # — the profile ages (thermal drift, new machine) and the EMA scales
+        # track the measured/profiled ratio without re-profiling
+        self.fwd_scale = 1.0
+        self.bwd_scale = 1.0
 
     @classmethod
     def profile(cls, measure, mbs_grid=(1, 2, 4, 8), seq_grid=(32, 64, 128, 256)):
@@ -391,10 +432,12 @@ class ProfiledCostModel(CostModel):
         return float(seq)
 
     def stage_fwd_time(self, mbs, seq, tp: int = 1) -> float:
-        return self._interp(self.fwd_t, mbs, self._norm_seq(seq)) / tp
+        return self._interp(self.fwd_t, mbs, self._norm_seq(seq)) / tp \
+            * self.fwd_scale
 
     def stage_bwd_time(self, mbs, seq, tp: int = 1) -> float:
-        return self._interp(self.bwd_t, mbs, self._norm_seq(seq)) / tp
+        return self._interp(self.bwd_t, mbs, self._norm_seq(seq)) / tp \
+            * self.bwd_scale
 
     def stage_act_memory(self, mbs, seq, tp: int = 1) -> float:
         return self._interp(self.mem, mbs, self._norm_seq(seq)) / tp
@@ -403,7 +446,80 @@ class ProfiledCostModel(CostModel):
         m, enc, dec = _norm_seq_batch(mbs, seq)
         mf = m.astype(np.float64)
         seqn = enc.astype(np.float64) + 1.5 * dec.astype(np.float64)
-        tf = self._interp_batch(self.fwd_t, mf, seqn) / tp
-        tb = self._interp_batch(self.bwd_t, mf, seqn) / tp
+        tf = self._interp_batch(self.fwd_t, mf, seqn) / tp * self.fwd_scale
+        tb = self._interp_batch(self.bwd_t, mf, seqn) / tp * self.bwd_scale
         mem = self._interp_batch(self.mem, mf, seqn) / tp
         return tf, tb, mem
+
+
+class OnlineCalibrator:
+    """Feeds measured stage timings back into a cost model's learned scales.
+
+    Wraps ``cost.update`` with the two things a raw EMA gets wrong online:
+
+    - **compile warm-up**: the first observation of each (mbs, seq) shape is
+      dominated by JIT compilation — skipped (``warmup`` observations per
+      shape) so compile time never leaks into the plan costs;
+    - **fwd/bwd attribution**: the sequential runner path only measures one
+      fused grad-step time; :meth:`observe_total` splits it by the model's
+      current predicted fwd:bwd ratio so both scales stay anchored.
+
+    ``summary()`` reports the learned scales plus prediction error before and
+    after calibration, which the tests and ``bench_elastic`` assert shrinks.
+    """
+
+    def __init__(self, cost: CostModel, ema: float = 0.25, warmup: int = 1):
+        self.cost = cost
+        self.ema = ema
+        self.warmup = warmup
+        self._seen: dict = {}
+        self.n_observed = 0
+        self.n_skipped = 0
+        self._first_err: dict = {}   # shape -> |log(pred/meas)| at first obs
+        self._last_err: dict = {}
+
+    @staticmethod
+    def _key(mbs, seq):
+        if isinstance(seq, (tuple, list, np.ndarray)):
+            return (int(mbs), int(seq[0]), int(seq[1]))
+        return (int(mbs), int(seq), 0)
+
+    def _record_err(self, key, mbs, seq, meas_s):
+        pred = self.cost.stage_fwd_time(mbs, seq) + self.cost.stage_bwd_time(mbs, seq)
+        if pred > 0.0 and meas_s > 0.0:
+            err = abs(float(np.log(pred / meas_s)))
+            self._first_err.setdefault(key, err)
+            self._last_err[key] = err
+
+    def observe(self, mbs: int, seq, fwd_s=None, bwd_s=None) -> bool:
+        """One measured stage timing; returns True if it updated the model."""
+        key = self._key(mbs, seq)
+        n = self._seen.get(key, 0)
+        self._seen[key] = n + 1
+        if n < self.warmup:
+            self.n_skipped += 1
+            return False
+        total = (fwd_s or 0.0) + (bwd_s or 0.0)
+        self._record_err(key, mbs, seq, total)
+        self.cost.update(mbs, seq, fwd_s=fwd_s, bwd_s=bwd_s, ema=self.ema)
+        self.n_observed += 1
+        return True
+
+    def observe_total(self, mbs: int, seq, total_s: float) -> bool:
+        """Fused fwd+bwd measurement, split by the predicted fwd:bwd ratio."""
+        pf = self.cost.stage_fwd_time(mbs, seq)
+        pb = self.cost.stage_bwd_time(mbs, seq)
+        frac = pf / (pf + pb) if (pf + pb) > 0.0 else 1.0 / 3.0
+        return self.observe(mbs, seq, fwd_s=total_s * frac,
+                            bwd_s=total_s * (1.0 - frac))
+
+    def summary(self) -> dict:
+        firsts = list(self._first_err.values())
+        lasts = list(self._last_err.values())
+        return {
+            **self.cost.scales(),
+            "n_observed": self.n_observed,
+            "n_skipped": self.n_skipped,
+            "err_first": float(np.mean(firsts)) if firsts else None,
+            "err_last": float(np.mean(lasts)) if lasts else None,
+        }

@@ -12,6 +12,21 @@ each stage a thread driving real JAX compute:
   on timeout or tag mismatch instead of hanging, which is how the tests
   demonstrate the paper's Fig. 8 problem and validate the §6 plan.
 
+Failure semantics (the robustness loop, ISSUE 7): every error a stage thread
+raises — an XLA error from a callback, an injected fault, a real deadlock —
+is surfaced as a structured :class:`PipelineError` carrying per-stage
+diagnostics (which instruction each stage was executing, per micro-batch).
+An internal **abort event** fans the failure out: peer stages blocked on
+channels or waits observe it within ~50 ms and exit with
+:class:`PipelineAborted` instead of timing out one by one, so ``run()``
+reports the *primary* failure promptly rather than a cascade of secondary
+channel timeouts. A genuinely stuck pipeline (no error, threads past the
+deadline) reports which stage is stuck on which instruction.
+
+``PipelineExecutor(..., hook=...)`` accepts a pre-instruction callback
+``hook(stage, instr)`` on the compute stream — the fault-injection point
+used by :mod:`repro.dist.chaos` (delay = straggler, raise = stage crash).
+
 Backward passes recompute the stage forward (activation checkpointing at
 stage granularity) via ``jax.vjp`` — matching RecomputePolicy.FULL; the only
 stashed state per in-flight micro-batch is its stage input, which is what the
@@ -21,39 +36,79 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 from repro.core.instructions import ExecutionPlan, Instr, Op
 
+_POLL_S = 0.05                       # abort-observation latency bound
 
-class DeadlockError(RuntimeError):
-    pass
+
+class PipelineError(RuntimeError):
+    """Structured executor failure: which stage, which instruction, plus a
+    per-stage diagnostic snapshot (``diagnostics``: one dict per stage with
+    its state and current compute/comm instruction)."""
+
+    def __init__(self, msg: str, stage: Optional[int] = None,
+                 instr: Optional[Instr] = None,
+                 diagnostics: Optional[list] = None):
+        super().__init__(msg)
+        self.stage = stage
+        self.instr = instr
+        self.diagnostics = diagnostics or []
+
+
+class DeadlockError(PipelineError):
+    """Communication-order mismatch or rendezvous timeout (paper Fig. 8)."""
+
+
+class PipelineAborted(PipelineError):
+    """Secondary failure: this stage was cleanly aborted because another
+    stage errored first. Never the primary error reported by ``run()``."""
 
 
 class Channel:
     """In-order rendezvous channel between one (src, dst) stage pair."""
 
-    def __init__(self, name: str, timeout: float):
+    def __init__(self, name: str, timeout: float,
+                 abort: Optional[threading.Event] = None):
         self.name = name
         self.timeout = timeout
+        self.abort = abort if abort is not None else threading.Event()
         self._cv = threading.Condition()
         self._queue: deque = deque()        # (tag, payload, consumed_event)
+
+    def poke(self) -> None:
+        """Wake any thread blocked in recv so it can observe the abort."""
+        with self._cv:
+            self._cv.notify_all()
 
     def send(self, tag, payload):
         ev = threading.Event()
         with self._cv:
             self._queue.append((tag, payload, ev))
             self._cv.notify_all()
-        if not ev.wait(self.timeout):
-            raise DeadlockError(
-                f"channel {self.name}: send {tag} never matched by a receive "
-                "(communication order mismatch)")
+        deadline = time.monotonic() + self.timeout
+        while not ev.wait(_POLL_S):
+            if self.abort.is_set():
+                raise PipelineAborted(
+                    f"channel {self.name}: send {tag} aborted (peer failed)")
+            if time.monotonic() > deadline:
+                raise DeadlockError(
+                    f"channel {self.name}: send {tag} never matched by a "
+                    "receive (communication order mismatch)")
+        return None
 
     def recv(self, tag):
         with self._cv:
-            ok = self._cv.wait_for(lambda: len(self._queue) > 0, self.timeout)
+            ok = self._cv.wait_for(
+                lambda: len(self._queue) > 0 or self.abort.is_set(),
+                self.timeout)
+            if self.abort.is_set():
+                raise PipelineAborted(
+                    f"channel {self.name}: recv {tag} aborted (peer failed)")
             if not ok:
                 raise DeadlockError(
                     f"channel {self.name}: recv {tag} timed out (no send posted)")
@@ -85,19 +140,28 @@ class StageCallbacks:
 
 class StageExecutor:
     def __init__(self, stage: int, n_stages: int, plan_stream: list[Instr],
-                 callbacks: StageCallbacks, channels: dict, timeout: float):
+                 callbacks: StageCallbacks, channels: dict, timeout: float,
+                 abort: threading.Event,
+                 hook: Optional[Callable[[int, Instr], None]] = None):
         self.stage = stage
         self.n_stages = n_stages
         self.stream = plan_stream
         self.cb = callbacks
         self.channels = channels
         self.timeout = timeout
+        self.abort = abort
+        self.hook = hook
         self.comm_q: "queue.Queue[Optional[Instr]]" = queue.Queue()
         self.recv_done: dict[tuple, threading.Event] = {}
         self.recv_buf: dict[tuple, Any] = {}
         self.send_buf: dict[tuple, Any] = {}
         self.error: Optional[BaseException] = None
         self._lock = threading.Lock()
+        # diagnostic state: what each thread is currently executing
+        self.compute_pos: Optional[tuple[int, Instr]] = None   # (idx, instr)
+        self.comm_pos: Optional[Instr] = None
+        self.compute_done = False
+        self.comm_done = False
 
     # ------------------------------ comm thread ------------------------
     @staticmethod
@@ -109,7 +173,9 @@ class StageExecutor:
             while True:
                 ins = self.comm_q.get()
                 if ins is None:
+                    self.comm_done = True
                     return
+                self.comm_pos = ins
                 if ins.op == Op.SEND_ACT_START:
                     tag = ("act", ins.micro_batch)
                     payload = self._pop_send(("act", ins.micro_batch))
@@ -126,19 +192,21 @@ class StageExecutor:
                     tag = ("grad", ins.micro_batch)
                     data = self.channels[self._dir(ins.peer, self.stage)].recv(tag)
                     self._post_recv(tag, data)
-        except BaseException as e:  # propagate to join()
-            self.error = e
+        except BaseException as e:  # propagate to run()
+            self.error = self.error or e
 
     def _pop_send(self, key):
         # payload must have been produced by the compute thread already
         # (Start ops are planned at production time), so this never blocks
         # long; guard anyway.
-        import time
         t0 = time.monotonic()
         while True:
             with self._lock:
                 if key in self.send_buf:
                     return self.send_buf.pop(key)
+            if self.abort.is_set():
+                raise PipelineAborted(
+                    f"stage {self.stage}: send {key} aborted (peer failed)")
             if time.monotonic() - t0 > self.timeout:
                 raise DeadlockError(f"stage {self.stage}: send payload {key} "
                                     "never produced")
@@ -153,15 +221,24 @@ class StageExecutor:
     def _wait_recv(self, tag):
         with self._lock:
             ev = self.recv_done.setdefault(tag, threading.Event())
-        if not ev.wait(self.timeout):
-            raise DeadlockError(f"stage {self.stage}: wait on {tag} timed out")
+        deadline = time.monotonic() + self.timeout
+        while not ev.wait(_POLL_S):
+            if self.abort.is_set():
+                raise PipelineAborted(
+                    f"stage {self.stage}: wait on {tag} aborted (peer failed)")
+            if time.monotonic() > deadline:
+                raise DeadlockError(
+                    f"stage {self.stage}: wait on {tag} timed out")
         with self._lock:
             return self.recv_buf.pop(tag)
 
     # ----------------------------- compute thread ----------------------
     def compute_loop(self):
         try:
-            for ins in self.stream:
+            for idx, ins in enumerate(self.stream):
+                self.compute_pos = (idx, ins)
+                if self.hook is not None:
+                    self.hook(self.stage, ins)
                 if ins.op in (Op.SEND_ACT_START, Op.SEND_GRAD_START,
                               Op.RECV_ACT_START, Op.RECV_GRAD_START):
                     self.comm_q.put(ins)
@@ -195,30 +272,63 @@ class StageExecutor:
                             self.send_buf[("grad", ins.micro_batch)] = g_in
                 elif ins.op == Op.REDUCE_AND_STEP:
                     self.cb.step()
+            self.compute_done = True
             self.comm_q.put(None)
         except BaseException as e:
-            self.error = e
+            self.error = self.error or e
             self.comm_q.put(None)
+
+    # ------------------------------ diagnostics ------------------------
+    def snapshot(self) -> dict:
+        """One diagnostic row for PipelineError.diagnostics."""
+        idx, ins = self.compute_pos if self.compute_pos else (None, None)
+        state = "error" if self.error is not None else (
+            "done" if self.compute_done else "running")
+        return {
+            "stage": self.stage,
+            "state": state,
+            "compute_instr": ins.short() if ins is not None else None,
+            "compute_index": idx,
+            "compute_total": len(self.stream),
+            "comm_instr": (self.comm_pos.short()
+                           if self.comm_pos is not None else None),
+            "micro_batch": ins.micro_batch if ins is not None else None,
+            "error": repr(self.error) if self.error is not None else None,
+        }
+
+    def describe_position(self) -> str:
+        if self.compute_pos is None:
+            return "before first instruction"
+        idx, ins = self.compute_pos
+        return f"instruction {idx}/{len(self.stream)} ({ins.short()})"
 
 
 class PipelineExecutor:
-    """Runs one iteration's ExecutionPlan across all stages (threads)."""
+    """Runs one iteration's ExecutionPlan across all stages (threads).
+
+    ``hook(stage, instr)`` — optional pre-instruction callback on every
+    compute stream (fault injection / tracing). Raising from the hook is
+    equivalent to the stage crashing on that instruction.
+    """
 
     def __init__(self, plan: ExecutionPlan, callbacks: list[StageCallbacks],
-                 timeout: float = 30.0):
+                 timeout: float = 30.0,
+                 hook: Optional[Callable[[int, Instr], None]] = None):
         self.plan = plan
         self.callbacks = callbacks
         self.timeout = timeout
+        self.hook = hook
 
     def run(self):
         c = self.plan.n_stages
+        abort = threading.Event()
         channels = {}
         for j in range(c - 1):
-            channels[f"{j}->{j+1}"] = Channel(f"{j}->{j+1}", self.timeout)
-            channels[f"{j+1}->{j}"] = Channel(f"{j+1}->{j}", self.timeout)
+            channels[f"{j}->{j+1}"] = Channel(f"{j}->{j+1}", self.timeout, abort)
+            channels[f"{j+1}->{j}"] = Channel(f"{j+1}->{j}", self.timeout, abort)
         stages = [
             StageExecutor(j, c, self.plan.per_stage[j], self.callbacks[j],
-                          channels, self.timeout)
+                          channels, self.timeout, abort, hook=self.hook)
             for j in range(c)
         ]
         threads = []
@@ -228,11 +338,63 @@ class PipelineExecutor:
             threads += [tc, tm]
             tc.start()
             tm.start()
-        for t in threads:
-            t.join(self.timeout * (len(self.plan.micro_batches) + 4))
-        for s in stages:
-            if s.error is not None:
-                raise s.error
-        for t in threads:
-            if t.is_alive():
-                raise DeadlockError("executor threads did not terminate")
+
+        def _broadcast_abort():
+            abort.set()
+            for ch in channels.values():
+                ch.poke()
+            for s in stages:
+                s.comm_q.put(None)   # unblock comm threads idle on get()
+
+        deadline = time.monotonic() + self.timeout * (
+            len(self.plan.micro_batches) + 4)
+        pending = list(threads)
+        while pending:
+            if not abort.is_set() and any(s.error for s in stages):
+                # a stage died: fan out the abort so peers fail fast with
+                # PipelineAborted instead of cascading channel timeouts
+                _broadcast_abort()
+            pending[0].join(_POLL_S)
+            if not pending[0].is_alive():
+                pending.pop(0)
+                continue
+            if time.monotonic() > deadline:
+                break
+
+        if pending and not abort.is_set():
+            # genuinely stuck (no stage error, deadline blown): abort so the
+            # daemon threads unwind, then report who was stuck where
+            _broadcast_abort()
+            t_grace = time.monotonic() + 5 * _POLL_S
+            for t in pending:
+                t.join(max(0.0, t_grace - time.monotonic()))
+
+        errors = [(s.stage, s.error) for s in stages if s.error is not None]
+        primary = next(((j, e) for j, e in errors
+                        if not isinstance(e, PipelineAborted)), None)
+        diag = [s.snapshot() for s in stages]
+
+        if primary is not None:
+            j, e = primary
+            if isinstance(e, PipelineError):
+                # deadlocks & aborts are already structured — keep their
+                # concrete class (tests match DeadlockError) and attach the
+                # full per-stage snapshot
+                e.stage = e.stage if e.stage is not None else j
+                e.diagnostics = diag
+                raise e
+            instr = stages[j].compute_pos[1] if stages[j].compute_pos else None
+            raise PipelineError(
+                f"stage {j} failed at {stages[j].describe_position()}: {e!r}",
+                stage=j, instr=instr, diagnostics=diag) from e
+
+        if any(t.is_alive() for t in threads):
+            stuck = [s for s in stages
+                     if not (s.compute_done and s.comm_done)]
+            where = "; ".join(
+                f"stage {s.stage} stuck at {s.describe_position()}"
+                for s in stuck) or "unknown stage"
+            raise PipelineError(
+                f"executor threads did not terminate: {where}",
+                stage=stuck[0].stage if stuck else None,
+                diagnostics=diag)

@@ -141,3 +141,10 @@ class InstructionStore:
         with self._cv:
             for it in [i for i in self._plans if i < iteration]:
                 del self._plans[it]
+
+    def clear(self) -> None:
+        """Drop every stored plan — the recovery drain: plans produced under
+        a dead topology or stale speed factors must not be executed."""
+        with self._cv:
+            self._plans.clear()
+            self._cv.notify_all()

@@ -83,6 +83,14 @@ def plan_replica(
     c = pcfg.n_stages
     specs = _mb_specs(mbs, order)
     n_micro = len(specs)
+    if n_micro == 0:
+        # legitimately empty: fewer micro-batches than replicas this
+        # iteration (tiny batch, or a near-zero speed factor starved the
+        # replica) — an idle replica executes nothing, not a crash
+        return ExecutionPlan(
+            n_stages=c, micro_batches=[], per_stage=[[] for _ in range(c)],
+            recompute=recompute, predicted_makespan=0.0,
+            predicted_peak_mem=[0.0] * c, meta={"injection_order": []})
     tf = np.array([[m.t_fwd / c] * c for m in specs])
     tb = np.array([[m.t_bwd / c] * c for m in specs])
     am = np.array([[m.mem / c] * c for m in specs])
@@ -230,6 +238,21 @@ class PlannerPool:
         inner.add_done_callback(_push)
         self.futures[iteration] = outer
         return outer
+
+    def discard(self, iteration: int) -> None:
+        """Forget (and best-effort cancel) the tracked future for one
+        iteration; the recovery path resubmits it afterwards."""
+        fut = self.futures.pop(iteration, None)
+        if fut is not None:
+            fut.cancel()
+
+    def drain(self) -> None:
+        """Cancel and forget every outstanding submission (fault recovery:
+        in-flight plans were made under a stale topology). Already-running
+        jobs finish in the background; their pushes are harmlessly
+        overwritten when the iterations are resubmitted."""
+        for it in list(self.futures):
+            self.discard(it)
 
     def shutdown(self):
         self.pool.shutdown(wait=True)

@@ -10,5 +10,7 @@ meshes and collectives. Three modules:
   ``shard_map``+``ppermute`` device plane and the threaded host plane.
 - :mod:`repro.dist.fault` — heartbeat/straggler monitoring and elastic
   re-planning over the surviving replica set.
+- :mod:`repro.dist.chaos` — deterministic fault injection (seeded,
+  replayable fault traces) for the recovery tests and ``bench_elastic``.
 """
-from repro.dist import fault, pipeline, sharding  # noqa: F401
+from repro.dist import chaos, fault, pipeline, sharding  # noqa: F401

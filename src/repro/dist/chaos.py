@@ -1,0 +1,221 @@
+"""Deterministic fault injection for the robustness loop (ISSUE 7).
+
+A :class:`FaultSchedule` is a *replayable* trace of faults: a list of
+:class:`FaultEvent` declaring, per iteration, what breaks and where. Tests
+and ``benchmarks/bench_elastic.py`` build the same schedule (explicitly or
+via :meth:`FaultSchedule.seeded`) and replay identical fault traces against
+``PlanAheadRunner`` runs, so recovery behaviour — and the post-recovery loss
+trajectory — is reproducible bit-for-bit given the trace.
+
+Four fault classes, mirroring the failure modes a real multi-replica run
+sees (paper §3: the planner is stateless per iteration, so every one of
+these reduces to "drain, maybe restore, replan over the survivors"):
+
+- ``STRAGGLER``    — delay one stage's compute instructions by ``delay_s``
+  (injected via the executor's pre-instruction hook). No error is raised;
+  the slow replica shows up in ``StragglerMonitor`` timings and, past the
+  runner's drift tolerance, in the next plan's speed factors.
+- ``STAGE_CRASH``  — raise :class:`InjectedFault` from a stage compute
+  thread. Surfaces as a structured ``PipelineError``; with
+  ``state_lost=True`` the runner must restore from the latest checkpoint
+  before retrying (a worker process died and took its state with it).
+- ``REPLICA_DEAD`` — suppress a replica's heartbeats from ``iteration``
+  onward. The monitor declares it dead after its timeout and the runner
+  re-plans the remaining stream over the survivors.
+- ``PLANNER_CRASH`` / ``PLANNER_LOST`` — corrupt (raise from) or kill
+  (never complete) one planner future. The runner must resubmit instead of
+  dying on ``future.result``.
+
+Injection is hook-based: nothing in the production path imports this module
+unless a schedule is passed in, and every event fires **at most once** (the
+schedule tracks fired events under a lock — executor hooks run on stage
+threads).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from enum import Enum
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+class FaultKind(str, Enum):
+    STRAGGLER = "straggler"
+    STAGE_CRASH = "stage_crash"
+    REPLICA_DEAD = "replica_dead"
+    PLANNER_CRASH = "planner_crash"
+    PLANNER_LOST = "planner_lost"
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One declared fault. ``stage``/``op``/``micro_batch`` target executor
+    faults (``micro_batch=-1`` fires on the first matching instruction);
+    ``replica`` targets heartbeat suppression and per-replica stragglers;
+    ``state_lost`` marks crashes the runner must checkpoint-restore from."""
+
+    iteration: int
+    kind: FaultKind
+    stage: int = 0
+    replica: int = 0
+    delay_s: float = 0.05
+    op: str = "F"                  # Op.value the executor hook fires on
+    micro_batch: int = -1          # -1 = first matching instruction
+    state_lost: bool = False
+
+    def describe(self) -> str:
+        extra = ""
+        if self.kind in (FaultKind.STRAGGLER, FaultKind.STAGE_CRASH):
+            extra = f" stage={self.stage}"
+        if self.kind == FaultKind.STRAGGLER:
+            extra += f" delay={self.delay_s:g}s"
+        if self.kind == FaultKind.REPLICA_DEAD:
+            extra = f" replica={self.replica}"
+        if self.state_lost:
+            extra += " state_lost"
+        return f"{self.kind.value}@it{self.iteration}{extra}"
+
+
+class InjectedFault(RuntimeError):
+    """Raised by chaos hooks; carries the :class:`FaultEvent` that fired."""
+
+    def __init__(self, event: FaultEvent):
+        super().__init__(f"injected fault: {event.describe()}")
+        self.event = event
+
+
+class LogicalClock:
+    """Injectable monotonic clock for :class:`StragglerMonitor`: one tick
+    per runner iteration instead of wall seconds, so liveness timeouts are
+    deterministic in tests and benches (``heartbeat_timeout`` is then
+    measured in iterations)."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def advance(self, dt: float = 1.0) -> None:
+        self._t += dt
+
+    def __call__(self) -> float:
+        return self._t
+
+
+class FaultSchedule:
+    """A replayable, fire-once fault trace.
+
+    ``executor_hook(iteration, replica)`` adapts the trace to the
+    ``PipelineExecutor`` hook protocol; ``take_planner_fault`` and
+    ``replica_silent`` are polled by the runner. ``log`` records every
+    fired event as ``(iteration, event)`` for assertions and bench reports.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent]):
+        self.events = sorted(events, key=lambda e: (e.iteration, e.kind.value))
+        self._fired: set[int] = set()
+        self._lock = threading.Lock()
+        self.log: list[FaultEvent] = []
+
+    # ----------------------------- bookkeeping -------------------------
+    def _take(self, idx: int) -> bool:
+        """Atomically claim event ``idx``; False if already fired."""
+        with self._lock:
+            if idx in self._fired:
+                return False
+            self._fired.add(idx)
+            self.log.append(self.events[idx])
+            return True
+
+    def pending(self) -> list[FaultEvent]:
+        with self._lock:
+            return [e for i, e in enumerate(self.events)
+                    if i not in self._fired
+                    and e.kind != FaultKind.REPLICA_DEAD]
+
+    # ------------------------- executor injection ----------------------
+    def executor_hook(self, iteration: int,
+                      replica: int = 0) -> Optional[Callable]:
+        """Pre-instruction hook for this (iteration, replica), or None.
+
+        The returned callable matches ``PipelineExecutor``'s
+        ``hook(stage, instr)`` protocol: it sleeps for ``STRAGGLER`` events
+        and raises :class:`InjectedFault` for ``STAGE_CRASH`` events whose
+        (stage, op, micro_batch) filter matches the instruction.
+        """
+        hits = [(i, e) for i, e in enumerate(self.events)
+                if e.iteration == iteration and e.replica == replica
+                and e.kind in (FaultKind.STRAGGLER, FaultKind.STAGE_CRASH)]
+        if not hits:
+            return None
+
+        def hook(stage: int, instr) -> None:
+            op = getattr(instr.op, "value", instr.op)
+            for idx, ev in hits:
+                if ev.stage != stage or ev.op != op:
+                    continue
+                if ev.micro_batch >= 0 and instr.micro_batch != ev.micro_batch:
+                    continue
+                if not self._take(idx):
+                    continue
+                if ev.kind == FaultKind.STRAGGLER:
+                    time.sleep(ev.delay_s)
+                else:
+                    raise InjectedFault(ev)
+        return hook
+
+    # -------------------------- planner injection ----------------------
+    def take_planner_fault(self, iteration: int) -> Optional[FaultEvent]:
+        """Claim (at most once) a planner fault declared for ``iteration``."""
+        for idx, ev in enumerate(self.events):
+            if ev.iteration == iteration and ev.kind in (
+                    FaultKind.PLANNER_CRASH, FaultKind.PLANNER_LOST):
+                if self._take(idx):
+                    return ev
+        return None
+
+    # ------------------------- heartbeat suppression -------------------
+    def replica_silent(self, iteration: int, replica: int) -> bool:
+        """True when ``replica`` must not heartbeat at ``iteration``
+        (REPLICA_DEAD is persistent: dead from its iteration onward)."""
+        for idx, ev in enumerate(self.events):
+            if (ev.kind == FaultKind.REPLICA_DEAD and ev.replica == replica
+                    and iteration >= ev.iteration):
+                self._take(idx)  # record first suppression in the log
+                return True
+        return False
+
+    # ------------------------------ factory ----------------------------
+    @classmethod
+    def seeded(cls, seed: int, n_iters: int, n_faults: int = 4,
+               n_stages: int = 2, n_replicas: int = 2,
+               kinds: Optional[Sequence[FaultKind]] = None,
+               delay_s: float = 0.05) -> "FaultSchedule":
+        """Deterministic random trace: ``n_faults`` events at distinct
+        iterations in ``[1, n_iters)``, kinds cycled from ``kinds`` (default:
+        one of each class). Same seed -> identical trace, any process."""
+        rng = np.random.default_rng([int(seed), 0xC4A05])
+        kinds = list(kinds) if kinds is not None else [
+            FaultKind.STRAGGLER, FaultKind.PLANNER_LOST,
+            FaultKind.STAGE_CRASH, FaultKind.REPLICA_DEAD]
+        lo, hi = 1, max(2, n_iters)
+        iters = sorted(rng.choice(np.arange(lo, hi),
+                                  size=min(n_faults, hi - lo),
+                                  replace=False).tolist())
+        events = []
+        for k, it in enumerate(iters):
+            kind = kinds[k % len(kinds)]
+            events.append(FaultEvent(
+                iteration=int(it), kind=kind,
+                stage=int(rng.integers(0, n_stages)),
+                replica=(int(rng.integers(1, max(2, n_replicas)))
+                         if kind == FaultKind.REPLICA_DEAD else 0),
+                delay_s=delay_s,
+                state_lost=bool(kind == FaultKind.STAGE_CRASH
+                                and rng.random() < 0.5),
+            ))
+        return cls(events)
+
+    def describe(self) -> list[str]:
+        return [e.describe() for e in self.events]

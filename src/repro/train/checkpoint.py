@@ -6,6 +6,14 @@ after node failure with a different device count is just ``load(...,
 shardings=new_spec_tree)``. Writes are atomic (tmp dir + rename) and keep a
 rolling window of the last ``keep`` checkpoints.
 
+Corruption handling (ISSUE 7): every leaf is CRC32-checksummed at save time
+(``manifest["format"] == 2``); ``load`` verifies checksums and raises
+:class:`CheckpointCorruptError` on a torn or bit-flipped checkpoint, and
+:func:`load_latest_valid` walks backwards past corrupt steps to the newest
+restorable one. ``save`` sweeps orphaned ``.tmp-*`` dirs left by crashed
+writers and uses collision-proof tmp names, so a pid-reusing restart can
+never rename a half-written tree over a good checkpoint.
+
 On a real multi-host cluster each host would write its owned shards and the
 manifest would carry the index (same layout orbax uses); the logical-array
 format here is the single-process equivalent with identical restore
@@ -17,12 +25,19 @@ import json
 import os
 import shutil
 import time
+import uuid
+import warnings
+import zlib
 from pathlib import Path
 from typing import Optional
 
 import jax
 import ml_dtypes
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """Checkpoint exists but fails structural or checksum validation."""
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -38,6 +53,10 @@ def _to_savable(arr: np.ndarray) -> np.ndarray:
     if arr.dtype.kind in "fiub?":
         return arr
     return arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _flatten(tree):
@@ -57,21 +76,33 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _sweep_tmp(ckpt_dir: Path) -> None:
+    """Remove orphaned .tmp-* dirs left behind by crashed writers."""
+    for p in ckpt_dir.glob(".tmp-*"):
+        if p.is_dir():
+            shutil.rmtree(p, ignore_errors=True)
+
+
 def save(ckpt_dir: str | Path, step: int, tree, keep: int = 3,
          extra: Optional[dict] = None) -> Path:
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
-    tmp = ckpt_dir / f".tmp-{step}-{os.getpid()}"
+    _sweep_tmp(ckpt_dir)
+    # uuid suffix: a restart that reuses this pid can never collide with (and
+    # rename over) a half-written tree from the previous incarnation
+    tmp = ckpt_dir / f".tmp-{step}-{os.getpid()}-{uuid.uuid4().hex[:8]}"
     tmp.mkdir(parents=True, exist_ok=True)
     flat, _ = _flatten(tree)
-    manifest = {"step": step, "time": time.time(), "extra": extra or {},
-                "leaves": {}}
+    manifest = {"format": 2, "step": step, "time": time.time(),
+                "extra": extra or {}, "leaves": {}}
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         fname = key.replace("/", "__") + ".npy"
-        np.save(tmp / fname, _to_savable(arr))
+        bits = _to_savable(arr)
+        np.save(tmp / fname, bits)
         manifest["leaves"][key] = {
-            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": _crc(bits)}
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     final = ckpt_dir / f"step_{step:08d}"
     if final.exists():
@@ -87,37 +118,69 @@ def _gc(ckpt_dir: Path, keep: int):
         shutil.rmtree(p, ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+def all_steps(ckpt_dir: str | Path) -> list[int]:
     ckpt_dir = Path(ckpt_dir)
-    steps = sorted(ckpt_dir.glob("step_*"))
-    if not steps:
-        return None
-    return int(steps[-1].name.split("_")[1])
+    return sorted(int(p.name.split("_")[1])
+                  for p in ckpt_dir.glob("step_*") if p.is_dir())
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def load(ckpt_dir: str | Path, tree_like, step: Optional[int] = None,
-         shardings=None):
+         shardings=None, verify: bool = True):
     """Restore into the structure of ``tree_like``. ``shardings``: optional
-    same-structure tree of jax.sharding.Sharding for elastic re-sharding."""
+    same-structure tree of jax.sharding.Sharding for elastic re-sharding.
+
+    Raises :class:`CheckpointCorruptError` on a torn checkpoint (missing
+    manifest/leaf file, truncated ``.npy``, checksum mismatch) and
+    ``KeyError``/``ValueError`` when the checkpoint is structurally
+    incompatible with ``tree_like`` (different leaf set).
+    """
     ckpt_dir = Path(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     d = ckpt_dir / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"{d}: manifest missing or unreadable ({e!r})") from e
 
     flat_like, treedef = _flatten(tree_like)
+    # strict structural match: a checkpoint with extra or missing leaves is a
+    # different model — refuse rather than silently loading the intersection
+    ck_keys, my_keys = set(manifest["leaves"]), set(flat_like)
+    if ck_keys != my_keys:
+        missing = sorted(my_keys - ck_keys)[:3]
+        extra = sorted(ck_keys - my_keys)[:3]
+        raise KeyError(
+            f"{d}: leaf set mismatch (checkpoint has {len(ck_keys)} leaves, "
+            f"model has {len(my_keys)}; missing={missing} extra={extra})")
     flat_sh = None
     if shardings is not None:
         flat_sh, _ = _flatten(shardings)
     leaves = []
     for key in flat_like:
         info = manifest["leaves"][key]
-        arr = np.load(d / info["file"])
+        try:
+            arr = np.load(d / info["file"])
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"{d}: leaf {key} unreadable ({e!r})") from e
+        if verify and "crc32" in info and _crc(arr) != info["crc32"]:
+            raise CheckpointCorruptError(
+                f"{d}: leaf {key} failed checksum (torn or corrupted write)")
         want = _np_dtype(info["dtype"])
         if arr.dtype != want:
             arr = arr.view(want)
+        if tuple(arr.shape) != tuple(info["shape"]):
+            raise CheckpointCorruptError(
+                f"{d}: leaf {key} shape {arr.shape} != manifest {info['shape']}")
         if flat_sh is not None:
             leaves.append(jax.device_put(arr, flat_sh[key]))
         else:
@@ -126,26 +189,49 @@ def load(ckpt_dir: str | Path, tree_like, step: Optional[int] = None,
     return jax.tree.unflatten(treedef, leaves), manifest
 
 
+def load_latest_valid(ckpt_dir: str | Path, tree_like, shardings=None):
+    """Newest restorable checkpoint: walk steps newest-first, skipping any
+    that is torn/corrupt/incompatible (with a warning). Returns
+    ``(state, manifest)`` or raises FileNotFoundError when nothing restores."""
+    steps = all_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    last_err: Optional[Exception] = None
+    for step in reversed(steps):
+        try:
+            return load(ckpt_dir, tree_like, step, shardings)
+        except (CheckpointCorruptError, KeyError, ValueError, TypeError) as e:
+            warnings.warn(f"checkpoint step {step} under {ckpt_dir} not "
+                          f"restorable ({e!r}); trying previous")
+            last_err = e
+    raise FileNotFoundError(
+        f"no restorable checkpoint under {ckpt_dir}: {last_err!r}")
+
+
 def restore_or_init(ckpt_dir, init_fn, shardings=None):
-    """Elastic restart helper: restore the latest checkpoint if one exists,
-    else initialize fresh. Returns (state, start_step). A checkpoint that
-    doesn't match the current model (different run left in the directory)
-    falls back to fresh init with a warning rather than crashing."""
-    step = latest_step(ckpt_dir)
-    if step is None:
+    """Elastic restart helper: restore the newest *valid* checkpoint if one
+    exists, else initialize fresh. Returns (state, start_step). A checkpoint
+    that doesn't match the current model (different run left in the
+    directory) falls back to fresh init with a warning rather than crashing."""
+    if latest_step(ckpt_dir) is None:
         return init_fn(), 0
     like = jax.eval_shape(init_fn)
     try:
-        state, manifest = load(ckpt_dir, like, step, shardings)
-    except (KeyError, ValueError, TypeError) as e:
-        import warnings
-        warnings.warn(f"checkpoint at {ckpt_dir} step {step} is incompatible "
-                      f"with the current model ({e!r}); initializing fresh")
+        state, manifest = load_latest_valid(ckpt_dir, like, shardings)
+    except (FileNotFoundError, KeyError, ValueError, TypeError) as e:
+        warnings.warn(f"no checkpoint under {ckpt_dir} is compatible with "
+                      f"the current model ({e!r}); initializing fresh")
         return init_fn(), 0
-    # shape check: stale checkpoints from a different config fall back too
-    for a, b in zip(jax.tree.leaves(like), jax.tree.leaves(state)):
+    # structural check: leaf counts must agree before zip-comparing shapes
+    # (zip silently truncates on ragged inputs)
+    like_leaves = jax.tree.leaves(like)
+    state_leaves = jax.tree.leaves(state)
+    if len(like_leaves) != len(state_leaves):
+        warnings.warn(f"checkpoint has {len(state_leaves)} leaves but model "
+                      f"has {len(like_leaves)}; initializing fresh")
+        return init_fn(), 0
+    for a, b in zip(like_leaves, state_leaves):
         if tuple(a.shape) != tuple(b.shape):
-            import warnings
             warnings.warn(f"checkpoint shapes mismatch current model "
                           f"({a.shape} vs {b.shape}); initializing fresh")
             return init_fn(), 0

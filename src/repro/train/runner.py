@@ -26,11 +26,32 @@ so planning cost never lands on the critical path. Concretely:
   thread (no pool). Both paths execute identical plans over identical
   batches with the same cached step functions, so losses are bit-identical
   — tests/test_plan_ahead.py asserts it.
+
+Fault tolerance (ISSUE 7): the run loop survives the four fault classes in
+:mod:`repro.dist.chaos` end-to-end. A failed iteration (structured
+``PipelineError`` from the executor, or an injected fault on the sequential
+path) is retried up to ``max_retries`` times with backoff: in-flight plans
+are drained, the remaining stream is replanned, and when the fault lost
+device state (``state_lost``) params/opt are restored from the newest valid
+checkpoint and the stream replayed from that step — deterministic streams
+make the replayed trajectory bit-equal to the fault-free one. Planner-future
+timeouts/crashes resubmit instead of raising; a dead replica (missed
+heartbeats) triggers an :class:`ElasticPlanManager` sweep that shrinks
+``dp_size`` to the survivors and re-splits every subsequent batch over them;
+all replicas' plans execute each iteration and their grads merge, so the
+full-batch gradient — and thus the loss trajectory — is preserved across
+topology changes. If retries are exhausted the runner writes a final
+emergency checkpoint before re-raising. With ``calibrate=True`` measured
+per-stage fwd/bwd timings feed an :class:`OnlineCalibrator` so the cost
+model's learned scales track the real machine.
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import dataclasses
+import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -39,13 +60,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.cost_model import CostModel
-from repro.core.executor import PipelineExecutor
-from repro.core.instructions import InstructionStore
+from repro.core.cost_model import CostModel, OnlineCalibrator
+from repro.core.executor import (PipelineError, PipelineExecutor,
+                                 StageCallbacks)
+from repro.core.instructions import ExecutionPlan, Instr, InstructionStore, Op
 from repro.core.planner import PlannerConfig, PlannerPool, plan_iteration
 from repro.data.dataset import materialize_micro_batch
 from repro.data.streams import GlobalBatch
-from repro.dist.fault import StragglerMonitor
+from repro.dist.chaos import FaultSchedule, InjectedFault, LogicalClock
+from repro.dist.fault import (ElasticPlanManager, StragglerMonitor,
+                              make_planner_replan)
 from repro.models import model as MD
 from repro.models import transformer as T
 from repro.train import checkpoint as CKPT
@@ -121,6 +145,15 @@ class RunnerConfig:
     impl: Optional[str] = None       # kernel impl for every fwd/bwd step
                                      # (None = kernels.default_impl(), which
                                      # honours REPRO_KERNEL_IMPL)
+    # ------------------------ fault tolerance --------------------------
+    max_retries: int = 2             # per-iteration retry budget on faults
+    retry_backoff_s: float = 0.05    # base backoff between retries
+    drift_tolerance: float = 1.2     # apply measured speed factors to plans
+                                     # only past this slowest/fastest ratio —
+                                     # below it, measurement noise would
+                                     # destroy plan determinism for nothing
+    calibrate: bool = False          # online cost-model calibration
+    exec_timeout: float = 120.0      # per-channel executor timeout
 
 
 class DatasetStream:
@@ -178,6 +211,11 @@ class RunnerStats:
     overlap_wait_s: float = 0.0      # plan_wait_s over the same iters
     cache: dict = field(default_factory=dict)
     mode: str = "plan-ahead"
+    # ------------------------ fault tolerance --------------------------
+    faults: int = 0                  # faults observed (exec + planner)
+    recovery_s: float = 0.0          # wall seconds spent in recovery paths
+    recoveries: list = field(default_factory=list)   # event dicts
+    calibration: dict = field(default_factory=dict)  # OnlineCalibrator summary
 
     @property
     def overlap_fraction(self) -> float:
@@ -199,7 +237,50 @@ class RunnerStats:
             "padded_tokens": self.padded_tokens,
             "overlap_fraction": round(self.overlap_fraction, 4),
             "cache": dict(self.cache),
+            "faults": self.faults,
+            "n_recoveries": len(self.recoveries),
+            "recovery_s": round(self.recovery_s, 4),
+            "recoveries": list(self.recoveries),
+            "calibration": dict(self.calibration),
         }
+
+
+def _injected_event(err: BaseException):
+    """Walk the cause chain for an InjectedFault; returns its FaultEvent."""
+    seen = set()
+    e: Optional[BaseException] = err
+    while e is not None and id(e) not in seen:
+        seen.add(id(e))
+        if isinstance(e, InjectedFault):
+            return e.event
+        e = e.__cause__ or e.__context__
+    return None
+
+
+def _timed_callbacks(cbs: list[StageCallbacks], records: list, lock):
+    """Wrap every stage's fwd/bwd with wall timers (block_until_ready so
+    dispatch isn't mistaken for compute). Records (stage, mb_id, kind, s)
+    under ``lock`` — callbacks run on stage threads."""
+    def wrap(j: int, cb: StageCallbacks) -> StageCallbacks:
+        def fwd(mb_id, *a):
+            t0 = time.perf_counter()
+            out = cb.forward(mb_id, *a)
+            if out is not None:
+                jax.block_until_ready(out)
+            with lock:
+                records.append((j, mb_id, "f", time.perf_counter() - t0))
+            return out
+
+        def bwd(mb_id, g):
+            t0 = time.perf_counter()
+            out = cb.backward(mb_id, g)
+            if out is not None:
+                jax.block_until_ready(out)
+            with lock:
+                records.append((j, mb_id, "b", time.perf_counter() - t0))
+            return out
+        return StageCallbacks(fwd, bwd, cb.step)
+    return [wrap(j, cb) for j, cb in enumerate(cbs)]
 
 
 class PlanAheadRunner:
@@ -209,7 +290,8 @@ class PlanAheadRunner:
                  rcfg: RunnerConfig, stream,
                  opt_cfg: Optional[AdamWConfig] = None,
                  monitor: Optional[StragglerMonitor] = None,
-                 step_cache: Optional[CompiledStepCache] = None):
+                 step_cache: Optional[CompiledStepCache] = None,
+                 chaos: Optional[FaultSchedule] = None):
         self.cfg = cfg
         self.cost = cost
         self.pcfg = pcfg
@@ -217,12 +299,22 @@ class PlanAheadRunner:
         self.stream = stream
         self.opt_cfg = opt_cfg if opt_cfg is not None else AdamWConfig(lr=3e-4)
         self.monitor = monitor
+        self.chaos = chaos
         self.step_cache = step_cache if step_cache is not None \
             else CompiledStepCache()
         self.store = InstructionStore()
         self.pool: Optional[PlannerPool] = None
         self._pending: dict[int, GlobalBatch] = {}
         self._futures: dict = {}
+        # positions in the alive list <-> original replica ids; shrinks on
+        # replica death (ElasticPlanManager sweep)
+        self._alive: list[int] = list(range(max(1, pcfg.dp_size)))
+        self.elastic = (ElasticPlanManager(monitor,
+                                           make_planner_replan(cost, pcfg))
+                        if monitor is not None else None)
+        self._calibrator = (OnlineCalibrator(cost)
+                            if rcfg.calibrate else None)
+        self._end = 0
 
     # ------------------------- planning side ---------------------------
     @staticmethod
@@ -232,8 +324,13 @@ class PlanAheadRunner:
 
     def _pcfg_now(self) -> PlannerConfig:
         p = self.pcfg
-        if self.monitor is not None and p.dp_size > 1:
-            sf = self.monitor.speed_factors()
+        if self.monitor is not None and p.dp_size > 1 \
+                and self.monitor.drift() > self.rcfg.drift_tolerance:
+            # past the drift tolerance the imbalance is real (straggler),
+            # not timing noise — bake measured factors into the next plan
+            all_sf = self.monitor.speed_factors()
+            sf = [all_sf[r] if r < len(all_sf) else 1.0
+                  for r in self._alive]
             sf = (sf + [1.0] * p.dp_size)[:p.dp_size]
             p = dataclasses.replace(p, speed_factors=sf)
         return p
@@ -241,28 +338,79 @@ class PlanAheadRunner:
     def _submit(self, it: int) -> None:
         gb = self.stream.batch(it)
         self._pending[it] = gb
-        self._futures[it] = self.pool.submit(
+        fut = self.pool.submit(
             it, self._plan_lengths(gb), self.cost, self._pcfg_now())
+        if self.chaos is not None:
+            ev = self.chaos.take_planner_fault(it)
+            if ev is not None:
+                # the real submission still runs (its store push is
+                # idempotent); the *future* the main loop sees is corrupted
+                # (crash) or lost (never completes) — _obtain must recover
+                fut = cf.Future()
+                if ev.kind.value == "planner_crash":
+                    fut.set_exception(InjectedFault(ev))
+        self._futures[it] = fut
 
-    def _obtain(self, it: int):
-        """Returns (global_batch, execution_plan, wait_s, planning_s)."""
-        if self.rcfg.synchronous:
+    def _reset_pool(self) -> None:
+        if self.pool is not None:
+            try:
+                self.pool.shutdown()
+            except Exception:
+                pass
+        self.pool = PlannerPool(
+            self.store, n_workers=max(2, self.rcfg.lookahead + 1),
+            use_processes=self.rcfg.use_processes)
+
+    def _obtain(self, it: int, stats: Optional[RunnerStats] = None):
+        """Returns (global_batch, replica-0 plan, IterationPlan, wait_s,
+        planning_s). Planner faults (timeout, crashed/lost future, broken
+        pool) resubmit with backoff instead of killing the run."""
+        rcfg = self.rcfg
+        if rcfg.synchronous:
             gb = self.stream.batch(it)
             t0 = time.perf_counter()
+            if self.chaos is not None:
+                ev = self.chaos.take_planner_fault(it)
+                if ev is not None and stats is not None:
+                    # inline planning: a dead planner is just re-run inline
+                    stats.faults += 1
+                    stats.recoveries.append(
+                        {"iter": it, "kind": "planner_replanned",
+                         "fault": ev.describe()})
             it_plan = plan_iteration(self._plan_lengths(gb), self.cost,
                                      self._pcfg_now())
             self.store.push(it, it_plan.replica_plans[0])
-            plan = self.store.fetch(it, timeout=self.rcfg.plan_timeout)
+            plan = self.store.fetch(it, timeout=rcfg.plan_timeout)
             wait = time.perf_counter() - t0
         else:
             gb = self._pending.pop(it)
             t0 = time.perf_counter()
-            it_plan = self._futures.pop(it).result(
-                timeout=self.rcfg.plan_timeout)
-            plan = self.store.fetch(it, timeout=self.rcfg.plan_timeout)
+            it_plan = None
+            for attempt in range(rcfg.max_retries + 1):
+                fut = self._futures.pop(it)
+                try:
+                    it_plan = fut.result(timeout=rcfg.plan_timeout)
+                    break
+                except (TimeoutError, cf.TimeoutError, cf.CancelledError,
+                        cf.BrokenExecutor, InjectedFault) as e:
+                    if attempt >= rcfg.max_retries:
+                        raise PipelineError(
+                            f"plan for iteration {it} failed after "
+                            f"{attempt + 1} attempts: {e!r}") from e
+                    if stats is not None:
+                        stats.faults += 1
+                        stats.recoveries.append(
+                            {"iter": it, "kind": "planner_resubmit",
+                             "fault": repr(e)})
+                    if isinstance(e, cf.BrokenExecutor):
+                        self._reset_pool()
+                    time.sleep(rcfg.retry_backoff_s * (attempt + 1))
+                    self._submit(it)
+                    self._pending.pop(it, None)  # gb already in hand
+            plan = self.store.fetch(it, timeout=rcfg.plan_timeout)
             wait = time.perf_counter() - t0
         self.store.evict_below(it)  # executed plans are dead; keep RSS flat
-        return gb, plan, wait, it_plan.planning_seconds
+        return gb, plan, it_plan, wait, it_plan.planning_seconds
 
     # ------------------------- execution side --------------------------
     @property
@@ -284,6 +432,147 @@ class PlanAheadRunner:
                     int(b["enc_tokens"].shape[1]),
                     int(b["dec_tokens"].shape[1]))
         return int(b["tokens"].shape[0]), int(b["tokens"].shape[1])
+
+    def _execute_replica(self, it: int, rep: int, plan: ExecutionPlan,
+                         gb: GlobalBatch, pm, params):
+        """One replica's plan -> (grads, loss_sum, weight_sum)."""
+        if not plan.micro_batches:
+            return None, 0.0, 0.0   # idle replica (fewer micro-batches than dp)
+        batches = {m.mb_id: materialize_micro_batch(
+                       m, gb.tokens, lengths=gb.lengths)
+                   for m in plan.micro_batches}
+        hook = (self.chaos.executor_hook(it, replica=rep)
+                if self.chaos is not None else None)
+        if pm is not None:
+            pm.set_params(params)
+            cbs, result = pm.make_callbacks(plan, batches)
+            records: list = []
+            if self._calibrator is not None:
+                cbs = _timed_callbacks(cbs, records, threading.Lock())
+            PipelineExecutor(plan, cbs, timeout=self.rcfg.exec_timeout,
+                             hook=hook).run()
+            grads = pm.merge_stage_grads(result["stage_grads"])
+            loss_sum, w_sum = result["loss_sum"], result["weight_sum"]
+            if self._calibrator is not None and records:
+                by_id = {m.mb_id: m for m in plan.micro_batches}
+                for _stage, mb_id, kind, secs in records:
+                    m = by_id[mb_id]
+                    seq = (tuple(m.seq) if isinstance(m.seq, (tuple, list))
+                           else m.seq)
+                    if kind == "f":
+                        self._calibrator.observe(m.mbs, seq, fwd_s=secs)
+                    else:
+                        self._calibrator.observe(m.mbs, seq, bwd_s=secs)
+            return grads, loss_sum, w_sum
+
+        grads, loss_sum, w_sum = None, 0.0, 0.0
+        by_id = {m.mb_id: m for m in plan.micro_batches}
+        for mb_id in sorted(batches):
+            if hook is not None:
+                # sequential path has no stage threads; model it as one
+                # stage-0 forward per micro-batch so stage-0 faults (and
+                # stragglers) inject identically
+                hook(0, Instr(Op.FORWARD, mb_id))
+            b = {k: jnp.asarray(v) for k, v in batches[mb_id].items()}
+            t0 = time.perf_counter()
+            ls, ws, g = self._grad_fn(self._batch_shape(b))(params, b)
+            loss_sum += float(ls)    # float() syncs: t0..here is real compute
+            w_sum += float(ws)
+            if self._calibrator is not None:
+                m = by_id[mb_id]
+                seq = (tuple(m.seq) if isinstance(m.seq, (tuple, list))
+                       else m.seq)
+                self._calibrator.observe_total(
+                    m.mbs, seq, time.perf_counter() - t0)
+            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+        return grads, loss_sum, w_sum
+
+    # ------------------------- recovery side ---------------------------
+    def _drain(self) -> None:
+        """Cancel in-flight plans and forget buffered state — they were
+        produced under a topology/speed assumption that just died."""
+        if self.pool is not None:
+            self.pool.drain()
+        for fut in self._futures.values():
+            fut.cancel()
+        self._futures.clear()
+        self._pending.clear()
+        self.store.clear()
+
+    def _resubmit_window(self, it: int) -> None:
+        if self.rcfg.synchronous or self.pool is None:
+            return
+        for i in range(it, min(it + max(1, self.rcfg.lookahead), self._end)):
+            if i not in self._futures:
+                self._submit(i)
+
+    def _topology_sweep(self, it: int, stats: RunnerStats) -> None:
+        """The replica set changed: run an ElasticPlanManager sweep, shrink
+        (or re-grow) ``dp_size`` to the survivors, drain + resubmit."""
+        gb = self.stream.batch(it)
+        res = self.elastic.plan(self._plan_lengths(gb))
+        alive = res["alive"]
+        if not alive:
+            raise PipelineError(f"iteration {it}: all replicas dead")
+        self._alive = list(alive)
+        self.pcfg = dataclasses.replace(
+            self.pcfg, dp_size=len(alive),
+            speed_factors=list(res["speed_factors"]))
+        if self.elastic.replan is not None:
+            # keep future sweeps replanning under the surviving topology
+            self.elastic.replan = make_planner_replan(self.cost, self.pcfg)
+        stats.faults += len(res["dead_this_sweep"])
+        stats.recoveries.append({
+            "iter": it, "kind": "replica_set_change",
+            "alive": list(alive), "dead": list(res["dead"]),
+            "dead_this_sweep": list(res["dead_this_sweep"]),
+            "recovered_this_sweep": list(res["recovered_this_sweep"]),
+        })
+        self._drain()
+        self._resubmit_window(it)
+
+    def _recover(self, it: int, err: BaseException, params, opt,
+                 stats: RunnerStats):
+        """Post-fault path: drain, maybe restore, replan. Returns
+        (params, opt, resume_iteration)."""
+        self._drain()
+        resume = it
+        ev = _injected_event(err)
+        if ev is not None and ev.state_lost and self.rcfg.ckpt_dir:
+            try:
+                like = jax.eval_shape(lambda: {"params": params, "opt": opt})
+                state, manifest = CKPT.load_latest_valid(
+                    self.rcfg.ckpt_dir, like)
+                params, opt = state["params"], state["opt"]
+                resume = int(manifest["step"])
+                stats.recoveries.append(
+                    {"iter": it, "kind": "checkpoint_restore",
+                     "restored_step": resume, "fault": repr(err)})
+            except FileNotFoundError:
+                warnings.warn(
+                    f"iteration {it}: state lost but no restorable "
+                    "checkpoint — retrying with in-memory params")
+                stats.recoveries.append(
+                    {"iter": it, "kind": "retry_no_checkpoint",
+                     "fault": repr(err)})
+        else:
+            stats.recoveries.append(
+                {"iter": it, "kind": "retry", "fault": repr(err)})
+        time.sleep(self.rcfg.retry_backoff_s)
+        self._resubmit_window(resume)
+        return params, opt, resume
+
+    def _emergency_save(self, it: int, params, opt) -> None:
+        """Best-effort final checkpoint before the run dies — must never
+        mask the original failure."""
+        if not self.rcfg.ckpt_dir:
+            return
+        try:
+            CKPT.save(self.rcfg.ckpt_dir, it, {"params": params, "opt": opt},
+                      extra={"emergency": True})
+        except Exception as e:   # noqa: BLE001 — reporting path
+            warnings.warn(f"emergency checkpoint at iteration {it} "
+                          f"failed: {e!r}")
 
     # ------------------------------ run --------------------------------
     def run(self):
@@ -319,50 +608,78 @@ class PlanAheadRunner:
                   if pipelined else None)
 
         end = start + rcfg.n_iters
+        self._end = end
         if not rcfg.synchronous:
-            self.pool = PlannerPool(
-                self.store, n_workers=max(2, rcfg.lookahead + 1),
-                use_processes=rcfg.use_processes)
+            self._reset_pool()
             for i in range(start, min(start + rcfg.lookahead, end)):
                 self._submit(i)
 
         history = []
         stats = RunnerStats(
             mode="synchronous" if rcfg.synchronous else "plan-ahead")
+        it = start
+        attempts = 0
         try:
-            for it in range(start, end):
+            while it < end:
                 t0 = time.perf_counter()
-                if not rcfg.synchronous and it + rcfg.lookahead < end:
-                    self._submit(it + rcfg.lookahead)
-                gb, plan, wait_s, planning_s = self._obtain(it)
+                try:
+                    if self.elastic is not None \
+                            and self.monitor.alive() != self._alive:
+                        t_rec = time.perf_counter()
+                        self._topology_sweep(it, stats)
+                        stats.recovery_s += time.perf_counter() - t_rec
+                    if not rcfg.synchronous and it + rcfg.lookahead < end \
+                            and (it + rcfg.lookahead) not in self._futures:
+                        self._submit(it + rcfg.lookahead)
+                    gb, plan, it_plan, wait_s, planning_s = \
+                        self._obtain(it, stats)
 
-                if self._encdec and any(
-                        not isinstance(m.seq, (tuple, list))
-                        for m in plan.micro_batches):
-                    raise ValueError(
-                        "enc-dec model got a decoder-only micro-batch: the "
-                        "stream must carry (enc, dec) lengths with dec > 0 "
-                        "for every sample (use encdec_fraction=1.0)")
-                batches = {m.mb_id: materialize_micro_batch(
-                               m, gb.tokens, lengths=gb.lengths)
-                           for m in plan.micro_batches}
-                if pipelined:
-                    pm.set_params(params)
-                    cbs, result = pm.make_callbacks(plan, batches)
-                    PipelineExecutor(plan, cbs, timeout=120).run()
-                    grads = pm.merge_stage_grads(result["stage_grads"])
-                    loss_sum, w_sum = result["loss_sum"], result["weight_sum"]
-                else:
+                    if self._encdec and any(
+                            not isinstance(m.seq, (tuple, list))
+                            for m in plan.micro_batches):
+                        raise ValueError(
+                            "enc-dec model got a decoder-only micro-batch: "
+                            "the stream must carry (enc, dec) lengths with "
+                            "dec > 0 for every sample (use "
+                            "encdec_fraction=1.0)")
+
+                    # every surviving replica's plan executes here (single
+                    # process stands in for the DP group) and the grads
+                    # merge, so the full-batch gradient — and the loss
+                    # trajectory — is invariant to how the planner split
+                    # work across replicas
                     grads, loss_sum, w_sum = None, 0.0, 0.0
-                    for mb_id in sorted(batches):
-                        b = {k: jnp.asarray(v)
-                             for k, v in batches[mb_id].items()}
-                        ls, ws, g = self._grad_fn(self._batch_shape(b))(
-                            params, b)
-                        loss_sum += float(ls)
-                        w_sum += float(ws)
-                        grads = g if grads is None else jax.tree.map(
-                            jnp.add, grads, g)
+                    replica_s: dict[int, float] = {}
+                    for pos, rplan in enumerate(it_plan.replica_plans):
+                        rep = (self._alive[pos] if pos < len(self._alive)
+                               else pos)
+                        # replica 0 executes the store-roundtripped plan
+                        # (keeps the serialization path on the hot loop);
+                        # others roundtrip locally for identical semantics
+                        xplan = plan if pos == 0 else \
+                            ExecutionPlan.from_json(rplan.to_json())
+                        rt0 = time.perf_counter()
+                        g, ls, ws = self._execute_replica(
+                            it, rep, xplan, gb, pm, params)
+                        replica_s[rep] = time.perf_counter() - rt0
+                        loss_sum += ls
+                        w_sum += ws
+                        if g is not None:
+                            grads = g if grads is None else jax.tree.map(
+                                jnp.add, grads, g)
+                except (PipelineError, InjectedFault) as e:
+                    stats.faults += 1
+                    attempts += 1
+                    if attempts > rcfg.max_retries:
+                        # retry budget exhausted — the BaseException handler
+                        # below writes the emergency checkpoint
+                        raise
+                    t_rec = time.perf_counter()
+                    params, opt, it = self._recover(it, e, params, opt,
+                                                    stats)
+                    stats.recovery_s += time.perf_counter() - t_rec
+                    continue
+                attempts = 0
 
                 scale = 1.0 / max(w_sum, 1.0)
                 grads = jax.tree.map(lambda g: g * scale, grads)
@@ -370,16 +687,26 @@ class PlanAheadRunner:
                                                self.opt_cfg)
                 dt = time.perf_counter() - t0
                 if self.monitor is not None:
-                    self.monitor.heartbeat(0, iter_time=dt)
+                    for rep in self._alive:
+                        if self.chaos is not None \
+                                and self.chaos.replica_silent(it, rep):
+                            continue
+                        self.monitor.heartbeat(
+                            rep, iter_time=replica_s.get(rep, dt))
+                    if isinstance(self.monitor.clock, LogicalClock):
+                        self.monitor.clock.advance(1.0)
 
                 padded = sum(
                     m.mbs * (sum(m.seq) if isinstance(m.seq, (tuple, list))
                              else m.seq)
-                    for m in plan.micro_batches)
+                    for rp in it_plan.replica_plans
+                    for m in rp.micro_batches)
+                n_micro = sum(len(rp.micro_batches)
+                              for rp in it_plan.replica_plans)
                 loss = loss_sum / max(w_sum, 1.0)
                 history.append({
                     "iter": it, "loss": loss, "time_s": dt,
-                    "n_micro": len(plan.micro_batches),
+                    "n_micro": n_micro,
                     "grad_norm": float(om["grad_norm"]),
                     "plan_wait_s": wait_s, "planning_s": planning_s,
                     "tokens": gb.total_tokens, "padded_tokens": int(padded),
@@ -396,15 +723,23 @@ class PlanAheadRunner:
 
                 if rcfg.log_every and it % rcfg.log_every == 0:
                     print(f"iter {it:5d}  loss {loss:8.4f}  micro-batches "
-                          f"{len(plan.micro_batches):3d}  {dt*1e3:7.1f} ms  "
+                          f"{n_micro:3d}  {dt*1e3:7.1f} ms  "
                           f"plan-wait {wait_s*1e3:6.1f} ms", flush=True)
                 if rcfg.ckpt_dir and rcfg.ckpt_every \
                         and (it + 1) % rcfg.ckpt_every == 0:
                     CKPT.save(rcfg.ckpt_dir, it + 1,
                               {"params": params, "opt": opt})
+                it += 1
+        except BaseException:
+            # anything that escapes the retry loop (including retries
+            # exhausted above) leaves a final restart point behind
+            self._emergency_save(it, params, opt)
+            raise
         finally:
             if self.pool is not None:
                 self.pool.shutdown()
                 self.pool = None
         stats.cache = self.step_cache.stats()
+        if self._calibrator is not None:
+            stats.calibration = self._calibrator.summary()
         return params, history, stats

@@ -1,0 +1,450 @@
+"""The robustness loop (ISSUE 7): fault injection, recovery, calibration.
+
+Covers the four chaos fault classes end-to-end through PlanAheadRunner
+(planner crash/loss, stage crash with and without state loss, replica death,
+straggler drift), the structured-PipelineError executor hardening, the
+checksummed checkpoint fallback chain, and online cost-model calibration.
+The load-bearing invariant throughout: a faulted run's *last-occurrence*
+loss trajectory equals the fault-free one, because recovery replans/replays
+deterministically.
+"""
+import dataclasses
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.core import comm_plan
+from repro.core.cost_model import (AnalyticCostModel, OnlineCalibrator,
+                                   ProfiledCostModel)
+from repro.core.executor import (DeadlockError, PipelineError,
+                                 PipelineExecutor, StageCallbacks)
+from repro.core.instructions import (ExecutionPlan, Instr, InstructionStore,
+                                     MicroBatchSpec, Op)
+from repro.core.planner import PlannerConfig, PlannerPool
+from repro.core.shapes import ShapePalette
+from repro.data.streams import MultiTaskStream, StreamConfig
+from repro.dist.chaos import (FaultEvent, FaultKind, FaultSchedule,
+                              InjectedFault, LogicalClock)
+from repro.dist.fault import StragglerMonitor
+from repro.train import checkpoint as CKPT
+from repro.train.runner import PlanAheadRunner, RunnerConfig
+
+CFG = dataclasses.replace(reduced(get_arch("gpt-paper")), n_layers=2)
+PAL = ShapePalette.build(min_seq=32, max_seq=128, seq_align=32, max_mbs=8)
+STREAM_CFG = StreamConfig(n_tasks=8, global_tokens=512, max_len=128,
+                          vocab=CFG.vocab, seed=5)
+
+
+def _runner(n_iters=5, n_stages=1, dp_size=1, use_executor=False,
+            synchronous=False, chaos=None, monitor=None, ckpt_dir="",
+            ckpt_every=0, max_retries=2, plan_timeout=20.0, calibrate=False,
+            cost=None, drift_tolerance=1.2):
+    cm = cost if cost is not None else AnalyticCostModel(CFG, n_stages=n_stages)
+    pcfg = PlannerConfig(n_stages=n_stages, dp_size=dp_size,
+                         d_model=CFG.d_model, palette=PAL)
+    rcfg = RunnerConfig(n_iters=n_iters, synchronous=synchronous,
+                        use_executor=use_executor, log_every=0,
+                        ckpt_dir=str(ckpt_dir), ckpt_every=ckpt_every,
+                        max_retries=max_retries, plan_timeout=plan_timeout,
+                        retry_backoff_s=0.01, calibrate=calibrate,
+                        drift_tolerance=drift_tolerance, exec_timeout=30.0)
+    return PlanAheadRunner(CFG, cm, pcfg, rcfg, MultiTaskStream(STREAM_CFG),
+                           monitor=monitor, chaos=chaos)
+
+
+def _last_losses(history) -> dict:
+    """iter -> loss of its LAST occurrence (recovery replays re-log iters)."""
+    return {h["iter"]: h["loss"] for h in history}
+
+
+# ------------------------------------------------------------------ chaos --
+def test_seeded_schedule_deterministic():
+    a = FaultSchedule.seeded(7, 20)
+    b = FaultSchedule.seeded(7, 20)
+    assert a.describe() == b.describe()
+    assert len(a.events) == 4
+    assert {e.kind for e in a.events} == {
+        FaultKind.STRAGGLER, FaultKind.PLANNER_LOST,
+        FaultKind.STAGE_CRASH, FaultKind.REPLICA_DEAD}
+    assert FaultSchedule.seeded(8, 20).describe() != a.describe()
+
+
+def test_fault_events_fire_at_most_once():
+    sched = FaultSchedule([FaultEvent(2, FaultKind.STAGE_CRASH, stage=0)])
+    hook = sched.executor_hook(2, replica=0)
+    with pytest.raises(InjectedFault) as ei:
+        hook(0, Instr(Op.FORWARD, 0))
+    assert ei.value.event.iteration == 2
+    hook(0, Instr(Op.FORWARD, 1))          # already fired: no raise
+    assert sched.executor_hook(3) is None  # other iterations unaffected
+    assert len(sched.log) == 1 and not sched.pending()
+
+
+def test_replica_silence_is_persistent():
+    sched = FaultSchedule([FaultEvent(3, FaultKind.REPLICA_DEAD, replica=1)])
+    assert not sched.replica_silent(2, 1)
+    assert sched.replica_silent(3, 1)
+    assert sched.replica_silent(7, 1)
+    assert not sched.replica_silent(7, 0)
+
+
+def test_logical_clock():
+    clk = LogicalClock()
+    mon = StragglerMonitor(2, heartbeat_timeout=2.0, clock=clk)
+    clk.advance(3.0)
+    mon.heartbeat(0)
+    assert mon.alive() == [0]
+
+
+# --------------------------------------------------------------- executor --
+def _single_stage_plan(n_mb=1):
+    specs = [MicroBatchSpec(i, [i], 1, 32, 1.0, 2.0, 1.0) for i in range(n_mb)]
+    stream = []
+    for i in range(n_mb):
+        stream += [Instr(Op.FORWARD, i), Instr(Op.BACKWARD, i)]
+    stream.append(Instr(Op.REDUCE_AND_STEP))
+    return ExecutionPlan(n_stages=1, micro_batches=specs, per_stage=[stream])
+
+
+def _two_stage_plan():
+    """A consistent 2-stage 2-micro-batch plan built via the §6 comm planner."""
+    from repro.core.schedule import schedule_adaptive
+    from repro.core.simulator import simulate
+    tf = np.ones((2, 2))
+    am = np.ones((2, 2))
+    order = schedule_adaptive(2, 2, am, float(am.sum()))
+    sim = simulate(order, tf, 2 * tf, act_mem=am)
+    specs = [MicroBatchSpec(i, [i], 1, 32, 1.0, 2.0, 1.0) for i in range(2)]
+    streams = comm_plan.build_instructions(order, specs, sim, d_model=8)
+    return ExecutionPlan(n_stages=2, micro_batches=specs, per_stage=streams)
+
+
+def test_stage_crash_is_structured_and_fast():
+    """A crashed stage thread surfaces as PipelineError naming the stage,
+    with diagnostics and the original cause — and the peer stage aborts
+    promptly instead of cascading into channel timeouts."""
+    import jax.numpy as jnp
+    plan = _two_stage_plan()
+
+    def fwd0(mb, h_in=None):
+        return jnp.zeros((2, 2))
+
+    def fwd1(mb, h_in=None):
+        raise ValueError("xla died")
+    cbs = [StageCallbacks(fwd0, lambda mb, g: None, lambda: None),
+           StageCallbacks(fwd1, lambda mb, g: jnp.zeros((2, 2)),
+                          lambda: None)]
+    t0 = time.monotonic()
+    with pytest.raises(PipelineError) as ei:
+        PipelineExecutor(plan, cbs, timeout=30.0).run()
+    assert time.monotonic() - t0 < 10.0   # no timeout*(n_micro+4) wait
+    e = ei.value
+    assert not isinstance(e, DeadlockError)
+    assert e.stage == 1
+    assert isinstance(e.__cause__, ValueError)
+    assert len(e.diagnostics) == 2
+    assert any(d["state"] == "error" for d in e.diagnostics)
+
+
+def test_stuck_executor_reports_stage_and_instruction():
+    plan = _single_stage_plan()
+
+    def fwd(mb, h_in=None):
+        time.sleep(5.0)
+    cbs = [StageCallbacks(fwd, lambda mb, g: None, lambda: None)]
+    t0 = time.monotonic()
+    with pytest.raises(PipelineError, match="stage 0 stuck at"):
+        PipelineExecutor(plan, cbs, timeout=0.1).run()
+    assert time.monotonic() - t0 < 4.0
+
+
+def test_hook_straggler_delays_and_crash_raises():
+    sched = FaultSchedule([
+        FaultEvent(0, FaultKind.STRAGGLER, stage=0, delay_s=0.2),
+        FaultEvent(1, FaultKind.STAGE_CRASH, stage=0),
+    ])
+    plan = _single_stage_plan()
+    cbs = [StageCallbacks(lambda mb, h=None: None, lambda mb, g: None,
+                          lambda: None)]
+    t0 = time.monotonic()
+    PipelineExecutor(plan, cbs, timeout=5.0,
+                     hook=sched.executor_hook(0)).run()
+    assert time.monotonic() - t0 >= 0.2    # straggler slept
+    with pytest.raises(PipelineError) as ei:
+        PipelineExecutor(plan, cbs, timeout=5.0,
+                         hook=sched.executor_hook(1)).run()
+    assert isinstance(ei.value.__cause__, InjectedFault)
+
+
+def test_deadlock_error_is_pipeline_error():
+    assert issubclass(DeadlockError, PipelineError)
+
+
+# ------------------------------------------------------------- checkpoint --
+def _tree(seed=0, n=3):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": rng.standard_normal((4, 4)).astype(np.float32)
+            for i in range(n)}
+
+
+def test_restore_or_init_leaf_count_mismatch_falls_back(tmp_path):
+    CKPT.save(tmp_path, 5, _tree(n=3))
+    with pytest.warns(UserWarning):
+        state, start = CKPT.restore_or_init(tmp_path, lambda: _tree(1, n=5))
+    assert start == 0 and len(state) == 5   # fresh init, not truncated zip
+
+
+def test_save_sweeps_stale_tmp_dirs(tmp_path):
+    stale = tmp_path / ".tmp-3-12345"
+    stale.mkdir(parents=True)
+    (stale / "junk.npy").write_bytes(b"torn")
+    CKPT.save(tmp_path, 1, _tree())
+    assert not list(tmp_path.glob(".tmp-*"))
+    assert CKPT.latest_step(tmp_path) == 1
+
+
+def test_corrupt_latest_falls_back_to_previous(tmp_path):
+    t = _tree()
+    CKPT.save(tmp_path, 1, t, keep=5)
+    CKPT.save(tmp_path, 2, _tree(seed=9), keep=5)
+    # tear the latest: truncate one leaf file
+    latest = tmp_path / "step_00000002"
+    leaf = next(latest.glob("*.npy"))
+    leaf.write_bytes(leaf.read_bytes()[:16])
+    state, manifest = CKPT.load_latest_valid(tmp_path, t)
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(state["w0"], t["w0"])
+    with pytest.warns(UserWarning):
+        _, start = CKPT.restore_or_init(tmp_path, lambda: _tree(seed=2))
+    assert start == 1
+
+
+def test_checksum_detects_bitflip(tmp_path):
+    t = _tree()
+    CKPT.save(tmp_path, 1, t)
+    d = tmp_path / "step_00000001"
+    leaf = next(d.glob("*.npy"))
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0xFF                       # flip data bits, keep the header
+    leaf.write_bytes(bytes(raw))
+    with pytest.raises(CKPT.CheckpointCorruptError, match="checksum"):
+        CKPT.load(tmp_path, t, 1)
+
+
+def test_load_rejects_leaf_superset(tmp_path):
+    """A checkpoint with MORE leaves than the model must not silently load
+    the intersection."""
+    CKPT.save(tmp_path, 1, _tree(n=4))
+    with pytest.raises(KeyError, match="leaf set mismatch"):
+        CKPT.load(tmp_path, _tree(n=2), 1)
+
+
+# ------------------------------------------------------- store/pool drain --
+def test_store_clear_and_pool_drain():
+    store = InstructionStore()
+    plan = _single_stage_plan()
+    store.push(3, plan)
+    store.clear()
+    with pytest.raises(TimeoutError):
+        store.fetch(3, timeout=0.05)
+    pool = PlannerPool(store, n_workers=1)
+    pool.futures[9] = __import__("concurrent.futures", fromlist=["x"]).Future()
+    pool.drain()
+    assert not pool.futures
+    pool.shutdown()
+
+
+# ------------------------------------------------- runner: planner faults --
+def test_planner_faults_resubmit_bitwise():
+    """PLANNER_CRASH and PLANNER_LOST futures are resubmitted; the resulting
+    trajectory is bit-identical to the fault-free run."""
+    chaos = FaultSchedule([
+        FaultEvent(1, FaultKind.PLANNER_CRASH),
+        FaultEvent(2, FaultKind.PLANNER_LOST),
+    ])
+    _, h_fault, s_fault = _runner(n_iters=4, chaos=chaos,
+                                  plan_timeout=0.5).run()
+    _, h_free, _ = _runner(n_iters=4).run()
+    assert [h["loss"] for h in h_fault] == [h["loss"] for h in h_free]
+    kinds = {r["kind"] for r in s_fault.recoveries}
+    assert "planner_resubmit" in kinds
+    assert s_fault.faults >= 2
+    assert len(chaos.pending()) == 0
+
+
+# --------------------------------------------------- runner: stage crash --
+def test_stage_crash_retries_bitwise_sequential():
+    chaos = FaultSchedule([FaultEvent(2, FaultKind.STAGE_CRASH, stage=0)])
+    _, h_fault, s_fault = _runner(n_iters=4, chaos=chaos).run()
+    _, h_free, _ = _runner(n_iters=4).run()
+    assert _last_losses(h_fault) == _last_losses(h_free)
+    assert s_fault.faults >= 1
+    assert any(r["kind"] == "retry" for r in s_fault.recoveries)
+    assert s_fault.recovery_s > 0
+
+
+@pytest.mark.slow
+def test_stage_crash_retries_bitwise_pipelined():
+    """Same invariant through the threaded 2-stage executor: the injected
+    stage-1 crash surfaces as PipelineError, the iteration retries, and the
+    trajectory matches fault-free bitwise."""
+    chaos = FaultSchedule([
+        FaultEvent(1, FaultKind.STAGE_CRASH, stage=1, op="F")])
+    kw = dict(n_iters=3, n_stages=2, use_executor=True)
+    _, h_fault, s_fault = _runner(chaos=chaos, **kw).run()
+    _, h_free, _ = _runner(**kw).run()
+    assert _last_losses(h_fault) == _last_losses(h_free)
+    assert s_fault.faults >= 1
+
+
+def test_state_lost_restores_from_checkpoint(tmp_path):
+    """state_lost faults restore params/opt from the newest checkpoint and
+    replay the stream — last-occurrence losses equal the fault-free run's
+    bitwise, including the replayed iterations."""
+    chaos = FaultSchedule([
+        FaultEvent(3, FaultKind.STAGE_CRASH, stage=0, state_lost=True)])
+    _, h_fault, s_fault = _runner(
+        n_iters=6, chaos=chaos, ckpt_dir=tmp_path / "a", ckpt_every=2).run()
+    _, h_free, _ = _runner(
+        n_iters=6, ckpt_dir=tmp_path / "b", ckpt_every=2).run()
+    restores = [r for r in s_fault.recoveries
+                if r["kind"] == "checkpoint_restore"]
+    assert restores and restores[0]["restored_step"] == 2
+    # iteration 3 failed, 2..3 replayed: history logs them twice
+    iters = [h["iter"] for h in h_fault]
+    assert iters.count(2) == 2
+    assert _last_losses(h_fault) == _last_losses(h_free)
+
+
+def test_emergency_checkpoint_on_exhausted_retries(tmp_path):
+    chaos = FaultSchedule([FaultEvent(1, FaultKind.STAGE_CRASH, stage=0)])
+    with pytest.raises((PipelineError, InjectedFault)):
+        _runner(n_iters=4, chaos=chaos, max_retries=0,
+                ckpt_dir=tmp_path).run()
+    step = CKPT.latest_step(tmp_path)
+    assert step == 1
+    manifest = json.loads(
+        (tmp_path / f"step_{step:08d}" / "manifest.json").read_text())
+    assert manifest["extra"]["emergency"] is True
+
+
+# ------------------------------------------------ runner: replica elastic --
+def test_replica_death_shrinks_dp_and_matches_trajectory():
+    """A dead replica (suppressed heartbeats) triggers an ElasticPlanManager
+    sweep through the runner: dp_size shrinks to the survivors and the loss
+    trajectory tracks the fault-free run (same micro-batches, merged grads)."""
+    clk = LogicalClock()
+    mon = StragglerMonitor(2, heartbeat_timeout=2.0, window=4, clock=clk)
+    chaos = FaultSchedule([FaultEvent(2, FaultKind.REPLICA_DEAD, replica=1)])
+    r = _runner(n_iters=8, dp_size=2, chaos=chaos, monitor=mon)
+    _, h_fault, s_fault = r.run()
+    assert r.pcfg.dp_size == 1
+    sweeps = [x for x in s_fault.recoveries
+              if x["kind"] == "replica_set_change"]
+    assert sweeps and sweeps[0]["dead_this_sweep"] == [1]
+    assert sweeps[0]["alive"] == [0]
+    _, h_free, _ = _runner(n_iters=8, dp_size=2).run()
+    a = np.array([h["loss"] for h in h_fault], dtype=np.float64)
+    b = np.array([h["loss"] for h in h_free], dtype=np.float64)
+    assert len(a) == len(b) == 8
+    np.testing.assert_allclose(a, b, rtol=1e-3)
+
+
+def test_straggler_shifts_monitor_speed_factors():
+    """Injected per-replica delays show up in measured iteration times →
+    drift and sub-1.0 speed factors for the slow replica."""
+    clk = LogicalClock()
+    mon = StragglerMonitor(2, heartbeat_timeout=50.0, window=4, clock=clk)
+    chaos = FaultSchedule([
+        FaultEvent(i, FaultKind.STRAGGLER, stage=0, replica=1, delay_s=0.4)
+        for i in range(1, 5)])
+    _runner(n_iters=5, dp_size=2, chaos=chaos, monitor=mon,
+            drift_tolerance=50.0).run()
+    assert mon.drift() > 1.1
+    sf = mon.speed_factors()
+    assert sf[0] == 1.0 and sf[1] < 0.95
+
+
+# -------------------------------------------- runner: seeded end-to-end --
+def test_seeded_trace_end_to_end(tmp_path):
+    """The acceptance trace: straggler + planner loss + state-losing stage
+    crash + replica death in ONE run — completes with recovery, dp shrinks,
+    and the last-occurrence trajectory matches fault-free closely."""
+    clk = LogicalClock()
+    mon = StragglerMonitor(2, heartbeat_timeout=2.0, window=4, clock=clk)
+    chaos = FaultSchedule([
+        FaultEvent(1, FaultKind.STRAGGLER, stage=0, replica=1, delay_s=0.05),
+        FaultEvent(2, FaultKind.PLANNER_LOST),
+        FaultEvent(3, FaultKind.STAGE_CRASH, stage=0, state_lost=True),
+        FaultEvent(4, FaultKind.REPLICA_DEAD, replica=1),
+    ])
+    r = _runner(n_iters=9, dp_size=2, chaos=chaos, monitor=mon,
+                ckpt_dir=tmp_path / "a", ckpt_every=2, plan_timeout=0.5)
+    _, h_fault, s_fault = r.run()
+    assert r.pcfg.dp_size == 1
+    assert len(chaos.pending()) == 0          # every declared fault fired
+    kinds = {x["kind"] for x in s_fault.recoveries}
+    assert "planner_resubmit" in kinds
+    assert "checkpoint_restore" in kinds
+    assert "replica_set_change" in kinds
+    assert all(np.isfinite(h["loss"]) for h in h_fault)
+
+    _, h_free, _ = _runner(n_iters=9, dp_size=2,
+                           ckpt_dir=tmp_path / "b", ckpt_every=2).run()
+    lf, lr = _last_losses(h_fault), _last_losses(h_free)
+    assert sorted(lf) == sorted(lr) == list(range(9))
+    np.testing.assert_allclose(
+        np.array([lf[i] for i in range(9)]),
+        np.array([lr[i] for i in range(9)]), rtol=1e-3)
+
+
+# ----------------------------------------------------------- calibration --
+def test_cost_model_update_converges():
+    cm = AnalyticCostModel(CFG, n_stages=2)
+    true_f = cm.stage_fwd_time(4, 64) * 3.0
+    true_b = cm.stage_bwd_time(4, 64) * 5.0
+    for _ in range(40):
+        cm.update(4, 64, fwd_s=true_f, bwd_s=true_b)
+    assert abs(cm.stage_fwd_time(4, 64) / true_f - 1.0) < 0.05
+    assert abs(cm.stage_bwd_time(4, 64) / true_b - 1.0) < 0.05
+    # batched path sees the calibrated scales bit-identically
+    tf, tb, _ = cm.stage_times_batch([4], [64])
+    assert tf[0] == cm.stage_fwd_time(4, 64)
+    assert tb[0] == cm.stage_bwd_time(4, 64)
+
+
+def test_profiled_model_update():
+    grid = (1, 2, 4, 8)
+    seqs = (32, 64, 128, 256)
+    base = np.ones((4, 4))
+    pm = ProfiledCostModel(grid, seqs, base * 1e-3, base * 2e-3, base * 1e6)
+    before = pm.stage_fwd_time(4, 64)
+    for _ in range(20):
+        pm.update(4, 64, fwd_s=4e-3, bwd_s=8e-3)
+    assert pm.stage_fwd_time(4, 64) > before * 2
+    assert abs(pm.stage_fwd_time(4, 64) - 4e-3) / 4e-3 < 0.1
+
+
+def test_calibrator_skips_compile_warmup():
+    cm = AnalyticCostModel(CFG, n_stages=1)
+    cal = OnlineCalibrator(cm, warmup=1)
+    assert not cal.observe(4, 64, fwd_s=100.0)     # warm-up skipped
+    assert cm.fwd_scale == 1.0
+    assert cal.observe(4, 64, fwd_s=100.0)
+    assert cm.fwd_scale > 1.0
+    assert cal.n_skipped == 1 and cal.n_observed == 1
+
+
+def test_runner_online_calibration_reduces_error():
+    """A cost model mis-scaled for this machine (TPU roofline on CPU)
+    self-calibrates during the run: learned scales move and the mean
+    |log(pred/measured)| shrinks."""
+    cm = AnalyticCostModel(CFG, n_stages=1)
+    _, _, stats = _runner(n_iters=6, cost=cm, calibrate=True).run()
+    cal = stats.calibration
+    assert cal["n_observed"] > 0 and cal["n_skipped"] > 0
+    assert cal["fwd_scale"] != 1.0
+    assert cal["err_last"] < cal["err_first"]
