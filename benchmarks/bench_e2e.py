@@ -74,8 +74,11 @@ MAX_DEC = 128          # t5 scenario: stream dec lengths cap at max_len // 4
 ROWS_PER_MB = 8
 
 
-def bench_json_path(scenario: str, smoke: bool) -> Path:
+def bench_json_path(scenario: str, smoke: bool,
+                    backend: str = "threads") -> Path:
     tag = "" if scenario == "gpt" else f"_{scenario}"
+    if backend != "threads":
+        tag += f"_{backend}"
     return REPO_ROOT / f"BENCH_e2e{tag}{'_smoke' if smoke else ''}.json"
 
 
@@ -216,18 +219,23 @@ def run_baseline(mode: str, stream, cfg, n_iters: int,
 
 
 def run_dynamic(stream, cfg, n_iters: int, lookahead: int = 1,
-                n_stages: int = 1, use_executor: bool = False) -> dict:
+                n_stages: int = 1, use_executor: bool = False,
+                backend: str = "threads") -> dict:
     """The plan-ahead runtime over the same stream (two epochs, 2nd timed).
     ``n_stages > 1`` with ``use_executor`` drives the threaded pipeline
-    executor (the t5 scenario's enc-dec pipeline)."""
+    executor (the t5 scenario's enc-dec pipeline); ``backend="mesh"``
+    compiles the plans into the shard_map+ppermute device plane."""
     cost = AnalyticCostModel(cfg, n_stages=n_stages)
     pal = ShapePalette.build(min_seq=64, max_seq=MAX_LEN, seq_align=64,
                              max_mbs=16)
     pcfg = PlannerConfig(n_stages=n_stages, d_model=cfg.d_model, palette=pal)
     rcfg = RunnerConfig(n_iters=2 * n_iters, lookahead=lookahead,
-                        use_executor=use_executor, log_every=0)
+                        use_executor=use_executor, log_every=0,
+                        backend=backend)
+    cache = CompiledStepCache()
     runner = PlanAheadRunner(cfg, cost, pcfg, rcfg,
-                             RepeatStream(stream, n_iters))
+                             RepeatStream(stream, n_iters),
+                             step_cache=cache)
     _, history, stats = runner.run()
     timed = history[n_iters:]
     wall = sum(h["time_s"] for h in timed)
@@ -250,16 +258,34 @@ def run_dynamic(stream, cfg, n_iters: int, lookahead: int = 1,
         "planning_s": round(planning, 4),
         "cache": stats.cache,
         "loss_last": round(timed[-1]["loss"], 4) if timed else None,
+        # mesh recompile bound: distinct compiled ring programs vs the
+        # palette × log2(M)-buckets ceiling (check_regression gates on this)
+        "mesh_steps_compiled": cache.count("mesh"),
+        "mesh_step_bound": (
+            len(pal.mbs_buckets) * len(pal.seq_buckets)
+            * (int(np.log2(max(
+                max((h["n_micro"] for h in history), default=1), 1))) + 1)),
     }
 
 
-def main(smoke: bool = False, scenario: str = "gpt", stages: int = 0):
+def main(smoke: bool = False, scenario: str = "gpt", stages: int = 0,
+         backend: str = "threads"):
     n_iters = 4 if smoke else 12
     global_tokens = 4096 if smoke else 8192
     cfg = tiny_model(scenario)
     stream = make_stream(scenario, global_tokens)
     print(f"stream: {stream.length_stats(n_iters)}", flush=True)
-    if stages == 0:
+    if backend == "mesh":
+        if scenario != "gpt":
+            raise SystemExit("backend=mesh runs the decoder-only scenario")
+        if stages == 0:
+            # as many pipeline stages as the device pool allows (CI forces
+            # 4 virtual CPU devices via XLA_FLAGS)
+            stages = max(s for s in (1, 2, 4, 8)
+                         if s <= len(jax.devices()))
+        cfg = dataclasses.replace(
+            cfg, n_layers=stages * len(cfg.layer_pattern))
+    elif stages == 0:
         # t5 default: the 2-stage enc-dec pipeline (encoder stage feeding
         # the decoder+cross-attn stage through the threaded executor)
         stages = 2 if scenario == "t5" else 1
@@ -271,7 +297,8 @@ def main(smoke: bool = False, scenario: str = "gpt", stages: int = 0):
         print(json.dumps(rec), flush=True)
         records.append(rec)
     rec = run_dynamic(stream, cfg, n_iters, n_stages=stages,
-                      use_executor=stages > 1)
+                      use_executor=backend == "threads" and stages > 1,
+                      backend=backend)
     print(json.dumps(rec), flush=True)
     records.append(rec)
 
@@ -281,22 +308,39 @@ def main(smoke: bool = False, scenario: str = "gpt", stages: int = 0):
     summary = {
         "mode": "_summary",
         "scenario": scenario,
+        "backend": backend,
         "n_stages": stages,
+        "n_devices": len(jax.devices()),
         "dynamic_over_padding": round(ratio, 3),
         "dynamic_over_packing": round(
             by_mode["dynamic"]["tokens_per_s"]
             / max(by_mode["packing"]["tokens_per_s"], 1e-9), 3),
         "planner_overlap_fraction":
             by_mode["dynamic"]["planner_overlap_fraction"],
+        "loss_last": by_mode["dynamic"]["loss_last"],
+        "mesh_steps_compiled": by_mode["dynamic"]["mesh_steps_compiled"],
+        "mesh_step_bound": by_mode["dynamic"]["mesh_step_bound"],
         "smoke": smoke,
     }
     print(json.dumps(summary), flush=True)
     records.append(summary)
 
-    out = bench_json_path(scenario, smoke)
+    out = bench_json_path(scenario, smoke, backend)
     out.write_text(json.dumps(records, indent=2) + "\n")
     print(f"wrote {out}", flush=True)
-    if ratio <= 1.0:
+    if backend == "mesh":
+        # virtual devices timeshare the same cores, so mesh throughput vs
+        # the single-device padding baseline is machine noise — gate the
+        # machine-independent invariants instead (check_regression.py adds
+        # the cross-run ratio non-degradation gate)
+        if summary["mesh_steps_compiled"] > summary["mesh_step_bound"]:
+            raise SystemExit(
+                f"mesh recompiles {summary['mesh_steps_compiled']} exceed "
+                f"palette bound {summary['mesh_step_bound']}")
+        if summary["loss_last"] is None \
+                or not np.isfinite(summary["loss_last"]):
+            raise SystemExit("mesh backend produced a non-finite loss")
+    elif ratio <= 1.0:
         raise SystemExit(
             f"dynamic micro-batching did NOT beat padding: {ratio:.3f}x")
 
@@ -310,5 +354,10 @@ if __name__ == "__main__":
                          "pipeline workload")
     ap.add_argument("--stages", type=int, default=0,
                     help="pipeline stages for the dynamic mode "
-                         "(0 = scenario default: gpt 1, t5 2)")
+                         "(0 = scenario default: gpt 1, t5 2; mesh: as "
+                         "many as the device pool divides)")
+    ap.add_argument("--backend", choices=("threads", "mesh"),
+                    default="threads",
+                    help="execution backend for the dynamic mode "
+                         "(mesh = compiled shard_map+ppermute pipeline)")
     main(**vars(ap.parse_args()))

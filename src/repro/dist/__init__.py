@@ -8,9 +8,22 @@ meshes and collectives. Three modules:
   ``spec_for``, ZeRO layouts, ``pure_dp``) over ``jax.sharding.Mesh``.
 - :mod:`repro.dist.pipeline` — pipeline execution: the compiled
   ``shard_map``+``ppermute`` device plane and the threaded host plane.
+- :mod:`repro.dist.backend` — the :class:`ExecutionBackend` protocol
+  unifying both planes behind ``execute_plan`` (``"threads"`` | ``"mesh"``).
 - :mod:`repro.dist.fault` — heartbeat/straggler monitoring and elastic
   re-planning over the surviving replica set.
 - :mod:`repro.dist.chaos` — deterministic fault injection (seeded,
   replayable fault traces) for the recovery tests and ``bench_elastic``.
 """
 from repro.dist import chaos, fault, pipeline, sharding  # noqa: F401
+
+
+def __getattr__(name):
+    # repro.dist.backend imports repro.train.pipeline_adapter, whose model
+    # imports land back on repro.dist.sharding — importing it eagerly here
+    # would re-enter this package before it finishes initializing. PEP 562
+    # lazy attribute access breaks the cycle.
+    if name == "backend":
+        import repro.dist.backend as backend
+        return backend
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

@@ -39,7 +39,19 @@ from repro.core.instructions import ExecutionPlan, Op
 
 def injection_order(plan: ExecutionPlan) -> list[int]:
     """Micro-batch ids in the order stage 0 launches forwards — the ring
-    entry order the §6 comm plan proved deadlock-free."""
+    entry order the §6 comm plan proved deadlock-free.
+
+    The planner records the schedule's cluster-permuted order in
+    ``plan.meta["injection_order"]`` (core/schedule.py's
+    ``cluster_permute_order``); that is the authoritative source. The
+    fallback scan of stage 0's instruction stream recovers the same order
+    for hand-built plans, but ``build_instructions`` breaks time ties by
+    global sequence number, which can disagree with the schedule's
+    permutation on tied launch times — so the meta entry wins when present,
+    keeping the compiled ring in lockstep with the simulator's timeline."""
+    meta_order = plan.meta.get("injection_order") if plan.meta else None
+    if meta_order:
+        return [int(i) for i in meta_order]
     return [ins.micro_batch for ins in plan.per_stage[0]
             if ins.op is Op.FORWARD]
 
@@ -155,10 +167,173 @@ def _pipelined_shardmap(stage_fn, stage_params, xs, mesh, axis, n_stages):
     return run(stage_params, xs)
 
 
+def pipelined_grads(
+    stage_fn: Callable,
+    stage_params,
+    shared_params,
+    batch_stack,
+    *,
+    mesh: Mesh,
+    n_stages: int,
+    h_spec: jax.ShapeDtypeStruct,
+):
+    """Forward **and backward** GPipe shift register — one compiled
+    ``shard_map`` program computing the summed loss and its parameter
+    gradients for a stack of equal-shape micro-batches.
+
+    This is the device plane's training step: ``M`` micro-batches ride a
+    ``M + S - 1``-tick forward ring (stage ``s`` computes micro-batch
+    ``t - s`` at tick ``t``, hands its activation to ``s + 1`` via
+    ``lax.ppermute`` — real P2P on the interconnect, issued in exactly the
+    order the caller stacked the micro-batches, i.e. the §6 comm-plan
+    injection order), then an equal-length backward ring in the reverse
+    direction: per tick, ``jax.vjp`` recomputes the stage forward from the
+    stashed stage input (stage-granular activation checkpointing, the same
+    policy as the host plane's ``train/pipeline_adapter.py``) and the
+    incoming cotangent ppermutes from stage ``s + 1`` to ``s``.
+
+    Args:
+      stage_fn: ``stage_fn(stage_weights, shared, h_buf, batch, stage, last)
+        -> (h_out, loss_sum, weight_sum)`` — a *uniform* per-stage transform
+        (``stage`` is a traced scalar): every stage runs the same program
+        and selects its role with ``jnp.where`` masks (first stage embeds,
+        last stage gets loss cotangent 1, see ``dist/backend.py``), which is
+        what makes the per-stage params homogeneous enough to shard with a
+        single ``P(stage_axis)`` spec.
+      stage_params: pytree with a leading ``n_stages`` axis, sharded over the
+        mesh's first axis (stage ``s`` computes with leaf ``[s]``).
+      shared_params: pytree replicated to every stage (embedding, final
+        norm, LM head); its gradient contributions are psum-reduced over
+        the stage axis in mesh order — the collective analogue of the host
+        plane's ``merge_stage_grads`` summation.
+      batch_stack: pytree of ``(M, ...)`` arrays, **already in ring
+        (injection) order**; replicated.
+      mesh: mesh whose first axis is the stage axis (size ``n_stages``;
+        size 1 degenerates to a single-stage program over the same code
+        path — the 1-device-parity configuration).
+      h_spec: ShapeDtypeStruct of the inter-stage activation payload.
+
+    Returns ``(loss_vec, weight_vec, stage_grads, shared_grads)``:
+      per-micro-batch ``(M,)`` f32 loss/weight sums (position ``i`` is the
+      ``i``-th *stacked* micro-batch — warm-up/drain garbage never lands in
+      a valid slot), gradients w.r.t. ``stage_params`` (leading stage axis,
+      sharded) and ``shared_params`` (replicated). Within a stage,
+      micro-batch gradients accumulate in ring order — matching the order
+      the host executor's FIFO backward stream accumulates them.
+    """
+    axis = mesh.axis_names[0]
+    if mesh.shape[axis] != n_stages:
+        raise ValueError(
+            f"stage axis {axis!r} has size {mesh.shape[axis]}, expected "
+            f"n_stages={n_stages}")
+    n_micro = jax.tree.leaves(batch_stack)[0].shape[0]
+    fwd = [(i, i + 1) for i in range(n_stages - 1)]
+    rev = [(i + 1, i) for i in range(n_stages - 1)]
+    n_ticks = n_micro + n_stages - 1
+    last = n_stages - 1
+
+    def local_fn(w_local, shared, bstack):
+        w = jax.tree.map(lambda a: a[0], w_local)
+        stage = jax.lax.axis_index(axis)
+
+        def slice_mb(m):
+            idx = jnp.clip(m, 0, n_micro - 1)
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0,
+                                                       keepdims=False),
+                bstack)
+
+        # ------------------------- forward ring -------------------------
+        def fwd_tick(t, carry):
+            buf, stash, loss_vec, w_vec = carry
+            m = t - stage                      # micro-batch at this stage
+            valid = (m >= 0) & (m < n_micro)
+            idx = jnp.clip(m, 0, n_micro - 1)
+            b = slice_mb(m)
+            h, ls, ws = stage_fn(w, shared, buf, b, stage, last)
+            # stash the stage *input* for the backward vjp recompute;
+            # warm-up/drain garbage never overwrites a valid slot
+            cur = jax.lax.dynamic_index_in_dim(stash, idx, 0, keepdims=False)
+            stash = jax.lax.dynamic_update_index_in_dim(
+                stash, jnp.where(valid, buf, cur), idx, 0)
+            write = valid & (stage == last)
+            lv = jax.lax.dynamic_index_in_dim(loss_vec, idx, 0,
+                                              keepdims=False)
+            wv = jax.lax.dynamic_index_in_dim(w_vec, idx, 0, keepdims=False)
+            loss_vec = jax.lax.dynamic_update_index_in_dim(
+                loss_vec, jnp.where(write, ls, lv), idx, 0)
+            w_vec = jax.lax.dynamic_update_index_in_dim(
+                w_vec, jnp.where(write, ws, wv), idx, 0)
+            # plan-ordered P2P hand-off (last stage's send is dropped;
+            # stage 0 receives zeros it never reads)
+            buf = jax.lax.ppermute(h, axis, perm=fwd)
+            return buf, stash, loss_vec, w_vec
+
+        buf0 = jnp.zeros(h_spec.shape, h_spec.dtype)
+        stash0 = jnp.zeros((n_micro,) + tuple(h_spec.shape), h_spec.dtype)
+        zvec = jnp.zeros((n_micro,), jnp.float32)
+        _, stash, loss_vec, w_vec = jax.lax.fori_loop(
+            0, n_ticks, fwd_tick, (buf0, stash0, zvec, zvec))
+
+        # ------------------------- backward ring ------------------------
+        # stage s handles micro-batch m = u - (last - s) at tick u, so the
+        # cotangent it needs arrived from stage s+1 (which handled the same
+        # m one tick earlier) via the reversed ppermute.
+        def bwd_tick(u, carry):
+            gbuf, gw_acc, gsh_acc = carry
+            m = u - (last - stage)
+            valid = (m >= 0) & (m < n_micro)
+            idx = jnp.clip(m, 0, n_micro - 1)
+            b = slice_mb(m)
+            x = jax.lax.dynamic_index_in_dim(stash, idx, 0, keepdims=False)
+
+            def f(w_, shared_, x_):
+                return stage_fn(w_, shared_, x_, b, stage, last)
+
+            (h, ls, ws), vjp = jax.vjp(f, w, shared, x)
+            g_h = jnp.where(stage == last, jnp.zeros_like(h), gbuf)
+            g_ls = jnp.where((stage == last) & valid, 1.0, 0.0).astype(
+                ls.dtype)
+            d_w, d_sh, d_x = vjp((g_h, g_ls, jnp.zeros_like(ws)))
+            gw_acc = jax.tree.map(
+                lambda a, g: a + jnp.where(valid, g, jnp.zeros_like(g)),
+                gw_acc, d_w)
+            gsh_acc = jax.tree.map(
+                lambda a, g: a + jnp.where(valid, g, jnp.zeros_like(g)),
+                gsh_acc, d_sh)
+            gbuf = jax.lax.ppermute(
+                jnp.where(valid, d_x, jnp.zeros_like(d_x)), axis, perm=rev)
+            return gbuf, gw_acc, gsh_acc
+
+        _, gw, gsh = jax.lax.fori_loop(
+            0, n_ticks, bwd_tick,
+            (jnp.zeros(h_spec.shape, h_spec.dtype),
+             jax.tree.map(jnp.zeros_like, w),
+             jax.tree.map(jnp.zeros_like, shared)))
+
+        # loss/weight live only on the last stage; shared-param grads are
+        # summed across stages in mesh order (= merge_stage_grads order)
+        loss_vec = jax.lax.psum(loss_vec, axis)
+        w_vec = jax.lax.psum(w_vec, axis)
+        gsh = jax.lax.psum(gsh, axis)
+        gw = jax.tree.map(lambda a: a[None], gw)
+        return loss_vec, w_vec, gw, gsh
+
+    in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P(), P())
+    out_specs = (P(), P(), P(axis), P())
+    run = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)
+    return run(stage_params, shared_params, batch_stack)
+
+
 def execute_plan(plan: ExecutionPlan, callbacks: list[StageCallbacks],
                  timeout: float = 60.0) -> None:
     """Host-plane entry point: interpret a (possibly ragged) ExecutionPlan
     with the threaded stage executor. Thin alias over
-    :class:`~repro.core.executor.PipelineExecutor` so ``repro.dist`` exposes
-    both execution planes."""
+    :class:`~repro.core.executor.PipelineExecutor`.
+
+    This is the low-level form; prefer the unified
+    :class:`repro.dist.backend.ExecutionBackend` protocol —
+    ``ThreadsBackend.execute_plan(plan, callbacks=...)`` is this call, and
+    the same signature with ``params=/batches=`` runs either plane."""
     PipelineExecutor(plan, callbacks, timeout=timeout).run()

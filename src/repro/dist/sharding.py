@@ -13,7 +13,7 @@ logical  resolves to mesh axes                        typical tensor dim
 ``tp``   the ``model`` axis                           heads / d_ff / vocab
 ``sp``   the ``model`` axis (same hardware, seq dim)  sequence
 ``ep``   the ``model`` axis                           experts
-``zero`` the batch-like axes (ZeRO shards over DP)    largest divisible dim
+``zero`` batch-like + pipeline-stage axes (ZeRO-1)    largest divisible dim
 ======== ============================================ =====================
 
 Resolution rules (all enforced by :func:`spec_for`):
@@ -53,9 +53,11 @@ from repro import _jax_compat
 
 LogicalDim = Union[str, None, tuple]
 
-# mesh-axis name classes; launch/mesh.py uses ("pod", "data", "model")
+# mesh-axis name classes; launch/mesh.py uses ("pod", "data", "model") and
+# make_stage_mesh uses ("stage",) for the pipeline axis
 _BATCH_AXES = ("pod", "data", "dp", "batch", "replica")
 _MODEL_AXES = ("model", "tp", "mdl", "tensor")
+_STAGE_AXES = ("stage", "pipe", "stages")
 
 _tls = threading.local()
 
@@ -115,8 +117,13 @@ def axis_map(mesh: Optional[Mesh] = None) -> dict:
         return {"dp": names, "tp": (), "sp": (), "ep": (), "zero": names}
     batch = tuple(a for a in names if a in _BATCH_AXES)
     model = tuple(a for a in names if a in _MODEL_AXES)
+    stage = tuple(a for a in names if a in _STAGE_AXES)
+    # ZeRO shards optimizer state over DP replicas *and* the pipeline-stage
+    # axis when one exists (the MeshBackend's ZeRO-1 layer); dp itself never
+    # resolves to the stage axis — stages hold different micro-batches, not
+    # replicas of the batch
     return {"dp": batch, "tp": model, "sp": model, "ep": model,
-            "zero": batch}
+            "zero": batch + stage}
 
 
 def axis_size(name: str, mesh: Optional[Mesh] = None) -> int:

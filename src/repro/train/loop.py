@@ -1,23 +1,21 @@
-"""Planner-driven training loop — thin wrapper over the plan-ahead runtime.
+"""Deprecated training-loop entry point — thin shim over the runner.
 
-``train()`` keeps the original entry-point signature but delegates to
-``train/runner.PlanAheadRunner``: the ``PlannerPool`` plans iteration k+1
-(dp_split -> adaptive schedule -> comm plan -> instruction lowering) while
-iteration k executes, jitted step functions live in a palette-keyed
-``CompiledStepCache``, and ``LoopConfig.synchronous`` selects the inline
-planning fallback (bit-identical losses; see tests/test_plan_ahead.py).
+The duplicated ``LoopConfig`` surface collapsed into
+:class:`repro.train.runner.RunnerConfig`: there is now exactly one way to
+configure a run (backend, lookahead, impl, calibration, fault policy all
+live on ``RunnerConfig``). ``LoopConfig`` is kept as a deprecated subclass
+that warns on construction and forwards verbatim — every old field name is
+a ``RunnerConfig`` field — and ``train()`` delegates to
+``PlanAheadRunner`` exactly as before.
 
-Data comes from a stream (``batch(k) -> GlobalBatch``). This wrapper adapts
-the stateful ``MultiTaskDataset`` via ``DatasetStream`` for backward
-compatibility; new code should feed a deterministic
-``data/streams.MultiTaskStream`` to ``PlanAheadRunner`` directly.
-
-Fault tolerance: checkpoint every ``ckpt_every`` (topology-agnostic restore),
-straggler speed factors feed the next iteration's replica balancing — see
-the ``monitor`` docstring below.
+New code: build a ``RunnerConfig`` and a ``PlanAheadRunner`` directly
+(feeding a deterministic ``data/streams.MultiTaskStream``); this module's
+``DatasetStream`` adaptation of the stateful ``MultiTaskDataset`` is the
+only thing ``train()`` still adds.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -31,24 +29,31 @@ from repro.train.runner import DatasetStream, PlanAheadRunner, RunnerConfig
 
 
 @dataclass
-class LoopConfig:
-    n_iters: int = 50
-    global_tokens: int = 4096
-    ckpt_every: int = 0              # 0 = off
-    ckpt_dir: str = ""
-    use_executor: bool = True        # threaded pipeline vs sequential accum
-    log_every: int = 10
-    seed: int = 0
-    synchronous: bool = False        # plan inline instead of plan-ahead
-    lookahead: int = 1               # plans in flight ahead of execution
-    use_processes: bool = False      # PlannerPool process backend
+class LoopConfig(RunnerConfig):
+    """Deprecated alias for :class:`repro.train.runner.RunnerConfig`.
+
+    Construction emits a ``DeprecationWarning``; every former ``LoopConfig``
+    field (``n_iters``, ``global_tokens``, ``ckpt_every``, ``ckpt_dir``,
+    ``use_executor``, ``log_every``, ``seed``, ``synchronous``,
+    ``lookahead``, ``use_processes``) is a ``RunnerConfig`` field, so old
+    call sites keep working unchanged.
+    """
+
+    def __post_init__(self):
+        warnings.warn(
+            "LoopConfig is deprecated; use repro.train.runner.RunnerConfig "
+            "(identical fields, plus backend/impl/fault policy)",
+            DeprecationWarning, stacklevel=3)
 
 
 def train(cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
-          lcfg: LoopConfig, opt_cfg: AdamWConfig = AdamWConfig(lr=3e-4),
+          lcfg: RunnerConfig, opt_cfg: AdamWConfig = AdamWConfig(lr=3e-4),
           dataset: Optional[MultiTaskDataset] = None,
           monitor: Optional[StragglerMonitor] = None):
     """Returns (params, history).
+
+    ``lcfg`` may be a ``RunnerConfig`` or the deprecated ``LoopConfig`` —
+    they are the same dataclass surface and are passed to the runner as-is.
 
     ``monitor`` (``n_replicas == pcfg.dp_size``) opts into straggler-aware
     planning. The monitor is an in-process registry: this loop heartbeats
@@ -63,12 +68,7 @@ def train(cfg: ArchConfig, cost: CostModel, pcfg: PlannerConfig,
                                      if pcfg.palette else 512,
                                      seed=lcfg.seed)
     stream = DatasetStream(ds, max(2, lcfg.global_tokens // 256), cfg.vocab)
-    rcfg = RunnerConfig(
-        n_iters=lcfg.n_iters, lookahead=lcfg.lookahead,
-        synchronous=lcfg.synchronous, use_processes=lcfg.use_processes,
-        use_executor=lcfg.use_executor, log_every=lcfg.log_every,
-        ckpt_every=lcfg.ckpt_every, ckpt_dir=lcfg.ckpt_dir, seed=lcfg.seed)
-    runner = PlanAheadRunner(cfg, cost, pcfg, rcfg, stream,
+    runner = PlanAheadRunner(cfg, cost, pcfg, lcfg, stream,
                              opt_cfg=opt_cfg, monitor=monitor)
     params, history, _stats = runner.run()
     return params, history

@@ -43,6 +43,57 @@ from repro.models import transformer as T
 from repro.train.step_cache import CompiledStepCache
 
 
+def model_cache_namespace(cfg: ArchConfig) -> str:
+    """Discriminator prefix for CompiledStepCache keys: a cache may be
+    shared across runners/models, so shape keys alone are not identity —
+    two configs with equal shapes must not hit each other's compiled
+    steps. ``repr`` of the config dataclass covers every field."""
+    return repr(cfg)
+
+
+def build_grad_step(cfg: ArchConfig, impl: Optional[str] = None):
+    """The sequential-path training step: jitted value_and_grad of the
+    summed xent over one micro-batch. Shared by the runner and
+    benchmarks/bench_e2e.py so benches measure exactly the system's math.
+
+    ``impl`` pins the kernel path (pallas/interpret/ref) for forward AND
+    backward — the attention kernels carry custom VJPs, so grad steps stay
+    on the selected kernels instead of falling back to the jnp oracle.
+    ``None`` defers to ``repro.kernels.default_impl()`` (which honours the
+    ``REPRO_KERNEL_IMPL`` env override)."""
+
+    @jax.jit
+    def grad_mb(p, batch):
+        def f(p_):
+            h, _, _ = MD.forward(p_, batch, cfg, mode="train", impl=impl)
+            return _xent_sum(p_.get("head", p_.get("embed")), h,
+                             batch["labels"], batch["loss_weights"], cfg)
+        (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
+        return loss_sum, w_sum, g
+    return grad_mb
+
+
+def build_encdec_grad_step(cfg: ArchConfig, impl: Optional[str] = None):
+    """Sequential enc-dec training step: value_and_grad of the dec-side
+    summed xent through the ``encdec_fwd`` oracle (tied embedding head).
+    The enc-dec analogue of :func:`build_grad_step`."""
+
+    @jax.jit
+    def grad_mb(p, batch):
+        def f(p_):
+            hd = T.encdec_fwd(
+                p_, batch["enc_tokens"], batch["dec_tokens"], cfg,
+                enc_segments=batch["enc_segment_ids"],
+                dec_segments=batch["dec_segment_ids"],
+                enc_positions=batch["enc_positions"],
+                dec_positions=batch["dec_positions"], impl=impl)
+            return _xent_sum(p_["embed"], hd, batch["labels"],
+                             batch["loss_weights"], cfg)
+        (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
+        return loss_sum, w_sum, g
+    return grad_mb
+
+
 def _stage_apply(cfg: ArchConfig, k: int, n_stages: int, impl, j: int,
                  sparams, x_or_batch, batch_aux):
     """Stage forward as a module-level pure function of static config —

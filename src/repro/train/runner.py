@@ -49,7 +49,6 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
-import threading
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -61,82 +60,41 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.cost_model import CostModel, OnlineCalibrator
-from repro.core.executor import (PipelineError, PipelineExecutor,
-                                 StageCallbacks)
-from repro.core.instructions import ExecutionPlan, Instr, InstructionStore, Op
+from repro.core.executor import PipelineError
+from repro.core.instructions import ExecutionPlan, InstructionStore
 from repro.core.planner import PlannerConfig, PlannerPool, plan_iteration
 from repro.data.dataset import materialize_micro_batch
 from repro.data.streams import GlobalBatch
+from repro.dist.backend import ExecutionBackend, make_backend
 from repro.dist.chaos import FaultSchedule, InjectedFault, LogicalClock
 from repro.dist.fault import (ElasticPlanManager, StragglerMonitor,
                               make_planner_replan)
 from repro.models import model as MD
 from repro.models import transformer as T
 from repro.train import checkpoint as CKPT
-from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
-from repro.train.pipeline_adapter import (EncDecPipelinedModel,
-                                          PipelinedModel, _xent_sum)
+from repro.train.optimizer import AdamWConfig, init_opt_state
+# Re-exported for backwards compatibility: these moved to
+# train/pipeline_adapter.py so dist/backend.py can import them without a
+# train.runner <-> dist.backend cycle. bench_e2e and older tests import
+# them from here.
+from repro.train.pipeline_adapter import (build_encdec_grad_step,  # noqa: F401
+                                          build_grad_step,
+                                          model_cache_namespace)
 from repro.train.step_cache import CompiledStepCache
-
-
-def model_cache_namespace(cfg: ArchConfig) -> str:
-    """Discriminator prefix for CompiledStepCache keys: a cache may be
-    shared across runners/models, so shape keys alone are not identity —
-    two configs with equal shapes must not hit each other's compiled
-    steps. ``repr`` of the config dataclass covers every field."""
-    return repr(cfg)
-
-
-def build_grad_step(cfg: ArchConfig, impl: Optional[str] = None):
-    """The sequential-path training step: jitted value_and_grad of the
-    summed xent over one micro-batch. Shared by the runner and
-    benchmarks/bench_e2e.py so benches measure exactly the system's math.
-
-    ``impl`` pins the kernel path (pallas/interpret/ref) for forward AND
-    backward — the attention kernels carry custom VJPs, so grad steps stay
-    on the selected kernels instead of falling back to the jnp oracle.
-    ``None`` defers to ``repro.kernels.default_impl()`` (which honours the
-    ``REPRO_KERNEL_IMPL`` env override)."""
-
-    @jax.jit
-    def grad_mb(p, batch):
-        def f(p_):
-            h, _, _ = MD.forward(p_, batch, cfg, mode="train", impl=impl)
-            return _xent_sum(p_.get("head", p_.get("embed")), h,
-                             batch["labels"], batch["loss_weights"], cfg)
-        (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
-        return loss_sum, w_sum, g
-    return grad_mb
-
-
-def build_encdec_grad_step(cfg: ArchConfig, impl: Optional[str] = None):
-    """Sequential enc-dec training step: value_and_grad of the dec-side
-    summed xent through the ``encdec_fwd`` oracle (tied embedding head).
-    The enc-dec analogue of :func:`build_grad_step`."""
-
-    @jax.jit
-    def grad_mb(p, batch):
-        def f(p_):
-            hd = T.encdec_fwd(
-                p_, batch["enc_tokens"], batch["dec_tokens"], cfg,
-                enc_segments=batch["enc_segment_ids"],
-                dec_segments=batch["dec_segment_ids"],
-                enc_positions=batch["enc_positions"],
-                dec_positions=batch["dec_positions"], impl=impl)
-            return _xent_sum(p_["embed"], hd, batch["labels"],
-                             batch["loss_weights"], cfg)
-        (loss_sum, w_sum), g = jax.value_and_grad(f, has_aux=True)(p)
-        return loss_sum, w_sum, g
-    return grad_mb
 
 
 @dataclass
 class RunnerConfig:
+    """The one canonical run configuration (train/loop.py's ``LoopConfig``
+    is a deprecated alias that forwards here)."""
     n_iters: int = 50
+    backend: str = "threads"         # execution plane: "threads" | "mesh"
+                                     # (see repro.dist.backend)
     lookahead: int = 1               # plans kept in flight ahead of execution
     synchronous: bool = False        # plan inline (fallback / bitwise oracle)
     use_processes: bool = False      # PlannerPool backend (see core/planner.py)
     use_executor: bool = True        # threaded pipeline vs sequential accum
+    global_tokens: int = 4096        # tokens per global batch (loop entry)
     log_every: int = 10
     ckpt_every: int = 0              # 0 = off
     ckpt_dir: str = ""
@@ -257,32 +215,6 @@ def _injected_event(err: BaseException):
     return None
 
 
-def _timed_callbacks(cbs: list[StageCallbacks], records: list, lock):
-    """Wrap every stage's fwd/bwd with wall timers (block_until_ready so
-    dispatch isn't mistaken for compute). Records (stage, mb_id, kind, s)
-    under ``lock`` — callbacks run on stage threads."""
-    def wrap(j: int, cb: StageCallbacks) -> StageCallbacks:
-        def fwd(mb_id, *a):
-            t0 = time.perf_counter()
-            out = cb.forward(mb_id, *a)
-            if out is not None:
-                jax.block_until_ready(out)
-            with lock:
-                records.append((j, mb_id, "f", time.perf_counter() - t0))
-            return out
-
-        def bwd(mb_id, g):
-            t0 = time.perf_counter()
-            out = cb.backward(mb_id, g)
-            if out is not None:
-                jax.block_until_ready(out)
-            with lock:
-                records.append((j, mb_id, "b", time.perf_counter() - t0))
-            return out
-        return StageCallbacks(fwd, bwd, cb.step)
-    return [wrap(j, cb) for j, cb in enumerate(cbs)]
-
-
 class PlanAheadRunner:
     """Drives training with planning double-buffered ahead of execution."""
 
@@ -291,12 +223,14 @@ class PlanAheadRunner:
                  opt_cfg: Optional[AdamWConfig] = None,
                  monitor: Optional[StragglerMonitor] = None,
                  step_cache: Optional[CompiledStepCache] = None,
-                 chaos: Optional[FaultSchedule] = None):
+                 chaos: Optional[FaultSchedule] = None, mesh=None):
         self.cfg = cfg
         self.cost = cost
         self.pcfg = pcfg
         self.rcfg = rcfg
         self.stream = stream
+        self.mesh = mesh                 # stage mesh for backend="mesh"
+        self.backend: Optional[ExecutionBackend] = None  # built in run()
         self.opt_cfg = opt_cfg if opt_cfg is not None else AdamWConfig(lr=3e-4)
         self.monitor = monitor
         self.chaos = chaos
@@ -417,14 +351,6 @@ class PlanAheadRunner:
     def _encdec(self) -> bool:
         return self.cfg.family == "encdec"
 
-    def _grad_fn(self, shape: tuple):
-        """shape: (mbs, seq) decoder-only or (mbs, enc, dec) enc-dec."""
-        impl = self.rcfg.impl
-        key = ("grad", model_cache_namespace(self.cfg), impl) + shape
-        build = (build_encdec_grad_step if len(shape) == 3
-                 else build_grad_step)
-        return self.step_cache.get(key, lambda: build(self.cfg, impl=impl))
-
     @staticmethod
     def _batch_shape(b) -> tuple:
         if "enc_tokens" in b:
@@ -434,7 +360,7 @@ class PlanAheadRunner:
         return int(b["tokens"].shape[0]), int(b["tokens"].shape[1])
 
     def _execute_replica(self, it: int, rep: int, plan: ExecutionPlan,
-                         gb: GlobalBatch, pm, params):
+                         gb: GlobalBatch, params):
         """One replica's plan -> (grads, loss_sum, weight_sum)."""
         if not plan.micro_batches:
             return None, 0.0, 0.0   # idle replica (fewer micro-batches than dp)
@@ -443,49 +369,23 @@ class PlanAheadRunner:
                    for m in plan.micro_batches}
         hook = (self.chaos.executor_hook(it, replica=rep)
                 if self.chaos is not None else None)
-        if pm is not None:
-            pm.set_params(params)
-            cbs, result = pm.make_callbacks(plan, batches)
-            records: list = []
-            if self._calibrator is not None:
-                cbs = _timed_callbacks(cbs, records, threading.Lock())
-            PipelineExecutor(plan, cbs, timeout=self.rcfg.exec_timeout,
-                             hook=hook).run()
-            grads = pm.merge_stage_grads(result["stage_grads"])
-            loss_sum, w_sum = result["loss_sum"], result["weight_sum"]
-            if self._calibrator is not None and records:
-                by_id = {m.mb_id: m for m in plan.micro_batches}
-                for _stage, mb_id, kind, secs in records:
-                    m = by_id[mb_id]
-                    seq = (tuple(m.seq) if isinstance(m.seq, (tuple, list))
-                           else m.seq)
-                    if kind == "f":
-                        self._calibrator.observe(m.mbs, seq, fwd_s=secs)
-                    else:
-                        self._calibrator.observe(m.mbs, seq, bwd_s=secs)
-            return grads, loss_sum, w_sum
-
-        grads, loss_sum, w_sum = None, 0.0, 0.0
-        by_id = {m.mb_id: m for m in plan.micro_batches}
-        for mb_id in sorted(batches):
-            if hook is not None:
-                # sequential path has no stage threads; model it as one
-                # stage-0 forward per micro-batch so stage-0 faults (and
-                # stragglers) inject identically
-                hook(0, Instr(Op.FORWARD, mb_id))
-            b = {k: jnp.asarray(v) for k, v in batches[mb_id].items()}
-            t0 = time.perf_counter()
-            ls, ws, g = self._grad_fn(self._batch_shape(b))(params, b)
-            loss_sum += float(ls)    # float() syncs: t0..here is real compute
-            w_sum += float(ws)
-            if self._calibrator is not None:
+        res = self.backend.execute_plan(
+            plan, params=params, batches=batches, hook=hook,
+            collect_timings=self._calibrator is not None,
+            timeout=self.rcfg.exec_timeout)
+        if self._calibrator is not None and res.timings:
+            by_id = {m.mb_id: m for m in plan.micro_batches}
+            for kind, mb_id, secs in res.timings:
                 m = by_id[mb_id]
                 seq = (tuple(m.seq) if isinstance(m.seq, (tuple, list))
                        else m.seq)
-                self._calibrator.observe_total(
-                    m.mbs, seq, time.perf_counter() - t0)
-            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
-        return grads, loss_sum, w_sum
+                if kind == "f":
+                    self._calibrator.observe(m.mbs, seq, fwd_s=secs)
+                elif kind == "b":
+                    self._calibrator.observe(m.mbs, seq, bwd_s=secs)
+                else:
+                    self._calibrator.observe_total(m.mbs, seq, secs)
+        return res.grads, res.loss_sum, res.weight_sum
 
     # ------------------------- recovery side ---------------------------
     def _drain(self) -> None:
@@ -544,6 +444,8 @@ class PlanAheadRunner:
                 state, manifest = CKPT.load_latest_valid(
                     self.rcfg.ckpt_dir, like)
                 params, opt = state["params"], state["opt"]
+                if self.backend is not None:
+                    opt = self.backend.place_opt_state(opt)
                 resume = int(manifest["step"])
                 stats.recoveries.append(
                     {"iter": it, "kind": "checkpoint_restore",
@@ -589,23 +491,11 @@ class PlanAheadRunner:
             if start:
                 params, opt = state["params"], state["opt"]
 
-        if self._encdec:
-            # total periods = enc + dec; the layout also requires the stage
-            # boundary to coincide with the enc/dec split
-            pipelined = rcfg.use_executor and pcfg.n_stages > 1 \
-                and (2 * cfg.n_periods) % pcfg.n_stages == 0 \
-                and cfg.n_periods % ((2 * cfg.n_periods) // pcfg.n_stages) == 0
-            pm = (EncDecPipelinedModel(cfg, params, pcfg.n_stages,
-                                       impl=rcfg.impl,
-                                       step_cache=self.step_cache)
-                  if pipelined else None)
-        else:
-            pipelined = (rcfg.use_executor and pcfg.n_stages > 1
-                         and cfg.n_periods % pcfg.n_stages == 0)
-            pm = (PipelinedModel(cfg, params, pcfg.n_stages,
-                                 impl=rcfg.impl,
-                                 step_cache=self.step_cache)
-                  if pipelined else None)
+        self.backend = make_backend(
+            rcfg.backend, cfg, pcfg.n_stages, impl=rcfg.impl,
+            step_cache=self.step_cache, use_executor=rcfg.use_executor,
+            exec_timeout=rcfg.exec_timeout, mesh=self.mesh)
+        opt = self.backend.place_opt_state(opt)
 
         end = start + rcfg.n_iters
         self._end = end
@@ -660,7 +550,7 @@ class PlanAheadRunner:
                             ExecutionPlan.from_json(rplan.to_json())
                         rt0 = time.perf_counter()
                         g, ls, ws = self._execute_replica(
-                            it, rep, xplan, gb, pm, params)
+                            it, rep, xplan, gb, params)
                         replica_s[rep] = time.perf_counter() - rt0
                         loss_sum += ls
                         w_sum += ws
@@ -683,8 +573,8 @@ class PlanAheadRunner:
 
                 scale = 1.0 / max(w_sum, 1.0)
                 grads = jax.tree.map(lambda g: g * scale, grads)
-                params, opt, om = adamw_update(params, grads, opt,
-                                               self.opt_cfg)
+                params, opt, om = self.backend.optimizer_step(
+                    params, grads, opt, self.opt_cfg)
                 dt = time.perf_counter() - t0
                 if self.monitor is not None:
                     for rep in self._alive:

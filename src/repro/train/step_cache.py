@@ -38,6 +38,18 @@ class CompiledStepCache:
     def keys(self):
         return self._fns.keys()
 
+    def keys_for(self, kind: str):
+        """Keys whose leading element is ``kind`` (``"grad"``, ``"fwd"``,
+        ``"mesh"``, ...). Tests and benches use this to assert recompile
+        bounds per execution plane — e.g. the mesh backend's compiled-step
+        count must stay ≤ palette shapes × log2 micro-batch buckets."""
+        return [k for k in self._fns
+                if isinstance(k, tuple) and k and k[0] == kind]
+
+    def count(self, kind: str) -> int:
+        """Number of compiled entries for one key kind (see keys_for)."""
+        return len(self.keys_for(kind))
+
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
