@@ -164,7 +164,7 @@ def timing_section(smoke: bool) -> list[dict]:
 
     records = []
     for impl in impls:
-        def fwd(q, k, v):
+        def fwd(q, k, v, impl=impl):
             return ops.attention(q, k, v, impl=impl, q_segment_ids=seg,
                                  kv_segment_ids=seg, block_q=BLOCK,
                                  block_kv=BLOCK)
@@ -177,8 +177,8 @@ def timing_section(smoke: bool) -> list[dict]:
         jax.block_until_ready(f_jit(q, k, v))       # compile
         jax.block_until_ready(g_jit(q, k, v))
         reps = 2 if impl == "interpret" else 5
-        tf = min(_timed(lambda: f_jit(q, k, v)) for _ in range(reps))
-        tg = min(_timed(lambda: g_jit(q, k, v)) for _ in range(reps))
+        tf = min(_timed(lambda f=f_jit: f(q, k, v)) for _ in range(reps))
+        tg = min(_timed(lambda g=g_jit: g(q, k, v)) for _ in range(reps))
         records.append({
             "impl": impl, "b": b, "t": t, "h": h, "d": d, "kv_heads": kv,
             "fwd_s": tf, "fwd_bwd_s": tg,

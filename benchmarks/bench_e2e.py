@@ -196,7 +196,8 @@ def run_baseline(mode: str, stream, cfg, n_iters: int,
             loss_sum += float(ls)
             w_sum += float(ws)
             grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
-        grads = jax.tree.map(lambda g: g * (1.0 / max(w_sum, 1.0)), grads)
+        grads = jax.tree.map(
+            lambda g, w=w_sum: g * (1.0 / max(w, 1.0)), grads)
         params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
         dt = time.perf_counter() - t0
 

@@ -36,6 +36,13 @@ committed under ``benchmarks/baselines/`` and exits non-zero on regression:
   backward passes) is proven separately by the NaN-poisoning test
   ``tests/test_kernel_grads.py::test_block_skip_survives_nan_in_dead_blocks``.
   Timing entries in the JSON are informational only.
+- **verifier** (``BENCH_verifier_smoke.json``): the static plan verifier
+  (``python -m repro.analysis``). Hard machine-independent gates: the
+  golden planner plans of every baseline scenario (gpt / t5 / mesh) must
+  verify with **zero** findings, the naive-baseline comm plan must be
+  convicted with a concrete happens-before cycle (paper Fig. 8b), and the
+  seeded chaos mutation corpus must be killed at 100% — a surviving
+  mutant means a defect class the verifier went blind to.
 - **elastic** (``BENCH_elastic_smoke.json``): the fault-tolerance loop
   (benchmarks/bench_elastic.py). Machine-independent hard invariants —
   the recovered loss trajectory must match fault-free to 1%, every
@@ -255,6 +262,57 @@ def check_attention(baseline: dict, current: dict, tol: float = 0.01) -> list[st
     return failures
 
 
+def check_verifier(baseline: dict, current: dict) -> list[str]:
+    """Static-verifier smoke gate (BENCH_verifier_smoke.json). All gates
+    are exact and machine-independent: the verifier is pure CPU analysis
+    over deterministic, seeded plans."""
+    failures = []
+    cur_by = {s["name"]: s for s in current.get("scenarios", [])}
+    for base in baseline.get("scenarios", []):
+        name = base["name"]
+        cur = cur_by.get(name)
+        if cur is None:
+            failures.append(f"verifier scenario {name!r} missing from current run")
+            continue
+        clean = cur["findings"] == 0
+        status = "ok" if clean else "FAIL"
+        print(
+            f"[{status}] verifier {name}: {cur['n_plans']} golden plans, "
+            f"{cur['n_instructions']} instructions, "
+            f"{cur['findings']} finding(s)"
+        )
+        if not clean:
+            failures.append(
+                f"verifier: golden {name} plans no longer verify clean "
+                f"({cur['errors']} errors, {cur['warnings']} warnings)"
+            )
+
+    naive = current.get("naive", {})
+    found = naive.get("cycle_found", False)
+    status = "ok" if found else "FAIL"
+    print(
+        f"[{status}] verifier naive baseline: cycle_found={found} "
+        f"(len {naive.get('cycle_len', 0)})"
+    )
+    if not found:
+        failures.append(
+            "verifier: naive-baseline deadlock no longer convicted with an "
+            "HB cycle"
+        )
+
+    mut = current.get("mutations", {})
+    total, killed = mut.get("total", 0), mut.get("killed", 0)
+    ok = total > 0 and killed == total
+    status = "ok" if ok else "FAIL"
+    print(f"[{status}] verifier mutation corpus: {killed}/{total} killed")
+    if not ok:
+        failures.append(
+            f"verifier: mutation kill rate {killed}/{total} "
+            f"(survivors: {mut.get('survivors', [])})"
+        )
+    return failures
+
+
 def check_elastic(baseline: list, current: list, factor: float) -> list[str]:
     failures = []
     cur_by = {r["mode"]: r for r in current}
@@ -336,6 +394,9 @@ def main() -> int:
     ap.add_argument(
         "--elastic", type=Path, default=REPO_ROOT / "BENCH_elastic_smoke.json"
     )
+    ap.add_argument(
+        "--verifier", type=Path, default=REPO_ROOT / "BENCH_verifier_smoke.json"
+    )
     ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
     ap.add_argument(
         "--factor",
@@ -375,6 +436,10 @@ def main() -> int:
         _load(args.baseline_dir / "BENCH_elastic_smoke.json"),
         _load(args.elastic),
         args.factor,
+    )
+    failures += check_verifier(
+        _load(args.baseline_dir / "BENCH_verifier_smoke.json"),
+        _load(args.verifier),
     )
 
     if failures:

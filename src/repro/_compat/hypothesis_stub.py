@@ -14,6 +14,7 @@ No shrinking, no example database.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import inspect
 import random
@@ -135,11 +136,9 @@ def settings(max_examples=None, deadline=None, **_ignored):
 def install() -> types.ModuleType:
     """Register the stub as ``hypothesis`` in ``sys.modules`` (no-op if the
     real package is importable). Returns the active ``hypothesis`` module."""
-    try:
+    with contextlib.suppress(ImportError):
         import hypothesis  # noqa: F401
         return sys.modules["hypothesis"]
-    except ImportError:
-        pass
     mod = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
     st.integers = _integers

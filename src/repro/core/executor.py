@@ -60,6 +60,28 @@ class PipelineError(RuntimeError):
         self.diagnostics = diagnostics or []
 
 
+class PlanRejectedError(PipelineError):
+    """Strict mode refused a plan before execution: the static verifier
+    (repro.analysis) found ERROR-level defects. ``report`` carries the
+    full :class:`~repro.analysis.VerifyReport`."""
+
+    def __init__(self, msg: str, report=None):
+        super().__init__(msg)
+        self.report = report
+
+
+def reject_bad_plan(plan: ExecutionPlan, where: str) -> None:
+    """Strict-mode gate shared by the executor and dist backends: verify
+    ``plan`` statically and raise :class:`PlanRejectedError` on any
+    ERROR-level finding (deadlock cycle, malformed IR, memory violation)."""
+    from repro.analysis import verify_plan   # deferred: analysis -> core
+    report = verify_plan(plan)
+    if report.errors:
+        raise PlanRejectedError(
+            f"{where}: refusing plan with {len(report.errors)} ERROR-level "
+            f"finding(s)\n{report.summary()}", report=report)
+
+
 class DeadlockError(PipelineError):
     """Communication-order mismatch or rendezvous timeout (paper Fig. 8)."""
 
@@ -309,17 +331,26 @@ class PipelineExecutor:
     ``hook(stage, instr)`` — optional pre-instruction callback on every
     compute stream (fault injection / tracing). Raising from the hook is
     equivalent to the stage crashing on that instruction.
+
+    ``strict=True`` statically verifies the plan (repro.analysis) before
+    spawning any thread and raises :class:`PlanRejectedError` on
+    ERROR-level findings — a defective plan then fails in microseconds
+    with a counterexample instead of via a channel timeout.
     """
 
     def __init__(self, plan: ExecutionPlan, callbacks: list[StageCallbacks],
                  timeout: float = 30.0,
-                 hook: Optional[Callable[[int, Instr], None]] = None):
+                 hook: Optional[Callable[[int, Instr], None]] = None,
+                 strict: bool = False):
         self.plan = plan
         self.callbacks = callbacks
         self.timeout = timeout
         self.hook = hook
+        self.strict = strict
 
     def run(self):
+        if self.strict:
+            reject_bad_plan(self.plan, "PipelineExecutor")
         c = self.plan.n_stages
         abort = threading.Event()
         channels = {}

@@ -33,6 +33,13 @@ class RecomputePolicy(str, Enum):
     FULL = "full"
 
 
+# comm-op groups shared by the renderer, the executor and repro.analysis
+SEND_OPS = (Op.SEND_ACT_START, Op.SEND_GRAD_START)
+RECV_OPS = (Op.RECV_ACT_START, Op.RECV_GRAD_START)
+WAIT_OPS = (Op.WAIT_RECV_ACT, Op.WAIT_RECV_GRAD)
+COMM_START_OPS = SEND_OPS + RECV_OPS
+
+
 @dataclass(frozen=True)
 class Instr:
     op: Op
@@ -41,8 +48,19 @@ class Instr:
     shape: Optional[tuple] = None      # communicated tensor shape (B, S, D)
 
     def short(self) -> str:
-        return f"{self.op.value}{self.micro_batch}" + (
-            f"->{self.peer}" if self.peer >= 0 else "")
+        """Unambiguous one-token rendering: ``SA+3->1`` (send to stage 1),
+        ``RA!3<-0`` (wait on a recv from stage 0), ``OPT``. Direction arrows
+        are uniform across Start and Wait ops so verifier counterexamples
+        and ``PipelineError`` diagnostics read the same way; a missing peer
+        renders as ``?`` instead of silently dropping the suffix."""
+        s = self.op.value
+        if self.micro_batch >= 0:
+            s += str(self.micro_batch)
+        if self.op in SEND_OPS:
+            return f"{s}->{self.peer if self.peer >= 0 else '?'}"
+        if self.op in RECV_OPS or self.op in WAIT_OPS:
+            return f"{s}<-{self.peer if self.peer >= 0 else '?'}"
+        return s
 
 
 @dataclass
@@ -55,6 +73,25 @@ class MicroBatchSpec:
     t_fwd: float
     t_bwd: float
     mem: float
+
+
+def _jsonable(obj: Any) -> Any:
+    """Normalize a metadata tree to plain JSON types. Applied on *both*
+    serialization directions so one round trip is a fixed point: numpy
+    scalars become Python numbers (instead of being stringified by a
+    ``default=`` hook), arrays and tuples become lists, and mapping keys
+    become strings (what ``json.dumps`` would silently do anyway)."""
+    if hasattr(obj, "tolist"):          # numpy array
+        return obj.tolist()
+    if hasattr(obj, "item"):            # numpy scalar
+        return obj.item()
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (bool, int, float, str)) or obj is None:
+        return obj
+    return str(obj)
 
 
 @dataclass
@@ -70,23 +107,26 @@ class ExecutionPlan:
     # ---------------- serialization (instruction store) ----------------
     def to_json(self) -> str:
         d = {
-            "n_stages": self.n_stages,
+            "n_stages": int(self.n_stages),
             "recompute": self.recompute.value,
-            "predicted_makespan": self.predicted_makespan,
-            "predicted_peak_mem": self.predicted_peak_mem,
-            "meta": self.meta,
-            "micro_batches": [asdict(m) for m in self.micro_batches],
+            "predicted_makespan": float(self.predicted_makespan),
+            "predicted_peak_mem": _jsonable(self.predicted_peak_mem),
+            "meta": _jsonable(self.meta),
+            "micro_batches": [_jsonable(asdict(m))
+                              for m in self.micro_batches],
             "per_stage": [
                 [
-                    {"op": i.op.value, "mb": i.micro_batch, "peer": i.peer,
-                     "shape": i.shape}
+                    {"op": i.op.value, "mb": _jsonable(i.micro_batch),
+                     "peer": _jsonable(i.peer), "shape": _jsonable(i.shape)}
                     for i in stream
                 ]
                 for stream in self.per_stage
             ],
         }
-        return json.dumps(
-            d, default=lambda o: o.item() if hasattr(o, "item") else str(o))
+        # everything above went through _jsonable — no default= escape
+        # hatch, so a non-serializable plan fails loudly at plan time
+        # instead of producing a lossy round trip
+        return json.dumps(d)
 
     @classmethod
     def from_json(cls, s: str) -> "ExecutionPlan":
@@ -95,6 +135,13 @@ class ExecutionPlan:
             # JSON has no tuples: restore the 2D (enc, dec) seq convention
             if isinstance(m.get("seq"), list):
                 m["seq"] = tuple(m["seq"])
+        # normalize meta on the way in as well, so plans built in memory
+        # (possibly with numpy-typed meta) and plans restored from JSON
+        # compare equal after one round trip
+        meta = _jsonable(d["meta"])
+        if "injection_order" in meta:
+            meta["injection_order"] = [
+                int(x) for x in meta["injection_order"]]
         return cls(
             n_stages=d["n_stages"],
             micro_batches=[MicroBatchSpec(**m) for m in d["micro_batches"]],
@@ -109,7 +156,7 @@ class ExecutionPlan:
             recompute=RecomputePolicy(d["recompute"]),
             predicted_makespan=d["predicted_makespan"],
             predicted_peak_mem=d["predicted_peak_mem"],
-            meta=d["meta"],
+            meta=meta,
         )
 
 

@@ -49,6 +49,12 @@ class PlannerConfig:
     dynamic_recompute: bool = False
     speed_factors: Optional[list[float]] = None
     mem_limit_factor: Optional[float] = None   # per-micro-batch DP cap
+    # opt-in static verification (repro.analysis) of every replica plan.
+    # Runs inside plan_iteration, i.e. on PlannerPool workers — off the
+    # execution critical path behind the planner overlap. ERROR-level
+    # findings raise PlanVerificationError; the findings summary is
+    # recorded in plan.meta["verification"] either way.
+    verify_plans: bool = False
 
 
 @dataclass
@@ -146,6 +152,18 @@ def plan_iteration(lengths, cost: CostModel, pcfg: PlannerConfig,
         t_max_interval=pcfg.t_max_interval)
     groups = microbatch.balance_replicas(mbs, pcfg.dp_size, pcfg.speed_factors)
     plans = [plan_replica(g, order, pcfg, recompute) for g in groups]
+    if pcfg.verify_plans:
+        # deferred import: repro.analysis depends on core, not vice versa
+        from repro.analysis import PlanVerificationError, verify_plan
+        for r, p in enumerate(plans):
+            report = verify_plan(p, palette=pcfg.palette,
+                                 mem_limit=pcfg.device_mem)
+            d = report.to_dict()
+            p.meta["verification"] = {"worst": d["worst"],
+                                      "counts": d["counts"]}
+            if report.errors:
+                raise PlanVerificationError(
+                    f"replica {r} plan failed static verification", report)
     t_iter = max(p.predicted_makespan for p in plans)
     return IterationPlan(
         replica_plans=plans,
@@ -203,6 +221,7 @@ class PlannerPool:
                  use_processes: bool = False):
         self.store = store
         self.use_processes = use_processes
+        self.pool: cf.Executor
         if use_processes:
             self.pool = cf.ProcessPoolExecutor(
                 max_workers=n_workers,

@@ -77,12 +77,12 @@ def simulate(
             if j == 0:
                 return 0.0
             key = (i, j - 1, "F")
-            return end.get(key, None) if key in end else None
+            return end.get(key) if key in end else None
         if j == n_stages - 1:
             key = (i, j, "F")
-            return end.get(key, None) if key in end else None
+            return end.get(key) if key in end else None
         key = (i, j + 1, "B")
-        return end.get(key, None) if key in end else None
+        return end.get(key) if key in end else None
 
     total = sum(len(d) for d in order)
     scheduled = 0

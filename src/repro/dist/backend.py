@@ -51,7 +51,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core.executor import PipelineExecutor, StageCallbacks
+from repro.core.executor import (PipelineExecutor, StageCallbacks,
+                                reject_bad_plan)
 from repro.core.instructions import ExecutionPlan, Instr, Op
 from repro.dist.pipeline import injection_order, pipelined_grads
 from repro.dist.sharding import spec_for_zero, zero1_logical
@@ -155,13 +156,15 @@ class ThreadsBackend(ExecutionBackend):
     def __init__(self, cfg: ArchConfig, n_stages: int,
                  impl: Optional[str] = None,
                  step_cache: Optional[CompiledStepCache] = None, *,
-                 use_executor: bool = True, exec_timeout: float = 120.0):
+                 use_executor: bool = True, exec_timeout: float = 120.0,
+                 strict: bool = False):
         self.cfg = cfg
         self.n_stages = n_stages
         self.impl = impl
         self.step_cache = step_cache if step_cache is not None \
             else CompiledStepCache()
         self.exec_timeout = exec_timeout
+        self.strict = strict
         if cfg.family == "encdec":
             # total periods = enc + dec; the layout also requires the stage
             # boundary to coincide with the enc/dec split
@@ -198,6 +201,8 @@ class ThreadsBackend(ExecutionBackend):
                      callbacks=None, hook=None, collect_timings: bool = False,
                      timeout: Optional[float] = None) -> BackendResult:
         timeout = timeout if timeout is not None else self.exec_timeout
+        if self.strict:
+            reject_bad_plan(plan, "ThreadsBackend")
         if callbacks is not None:
             # raw host-plane mode: caller owns the stage callbacks (what
             # dist/pipeline.py::execute_plan exposes)
@@ -308,7 +313,8 @@ class MeshBackend(ExecutionBackend):
     def __init__(self, cfg: ArchConfig, n_stages: int,
                  impl: Optional[str] = None,
                  step_cache: Optional[CompiledStepCache] = None, *,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, strict: bool = False):
+        self.strict = strict
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "MeshBackend runs decoder-only models; the enc-dec pipeline "
@@ -384,6 +390,8 @@ class MeshBackend(ExecutionBackend):
     def execute_plan(self, plan: ExecutionPlan, *, params=None, batches=None,
                      callbacks=None, hook=None, collect_timings: bool = False,
                      timeout: Optional[float] = None) -> BackendResult:
+        if self.strict:
+            reject_bad_plan(plan, "MeshBackend")
         if callbacks is not None:
             raise ValueError(
                 "the mesh backend compiles plans into shard_map programs; "
@@ -485,14 +493,17 @@ def make_backend(name: str, cfg: ArchConfig, n_stages: int, *,
                  impl: Optional[str] = None,
                  step_cache: Optional[CompiledStepCache] = None,
                  use_executor: bool = True, exec_timeout: float = 120.0,
-                 mesh: Optional[Mesh] = None) -> ExecutionBackend:
-    """Backend factory keyed by ``RunnerConfig.backend``."""
+                 mesh: Optional[Mesh] = None,
+                 strict: bool = False) -> ExecutionBackend:
+    """Backend factory keyed by ``RunnerConfig.backend``. ``strict=True``
+    makes either backend statically verify every plan (repro.analysis)
+    and refuse ERROR-level ones with :class:`PlanRejectedError`."""
     if name == "threads":
         return ThreadsBackend(cfg, n_stages, impl=impl, step_cache=step_cache,
                               use_executor=use_executor,
-                              exec_timeout=exec_timeout)
+                              exec_timeout=exec_timeout, strict=strict)
     if name == "mesh":
         return MeshBackend(cfg, n_stages, impl=impl, step_cache=step_cache,
-                           mesh=mesh)
+                           mesh=mesh, strict=strict)
     raise ValueError(f"unknown execution backend {name!r}; "
                      "expected 'threads' or 'mesh'")

@@ -35,11 +35,20 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
+from collections import defaultdict
+from dataclasses import dataclass, replace
 from enum import Enum
 from typing import Callable, Optional, Sequence
 
 import numpy as np
+
+from repro.core.instructions import (
+    COMM_START_OPS,
+    SEND_OPS,
+    WAIT_OPS,
+    ExecutionPlan,
+    Op,
+)
 
 
 class FaultKind(str, Enum):
@@ -219,3 +228,149 @@ class FaultSchedule:
 
     def describe(self) -> list[str]:
         return [e.describe() for e in self.events]
+
+
+# ---------------------------------------------------------------------------
+# Plan-mutation operators (the verifier's chaos corpus)
+#
+# Each operator seeds one *defect by construction* into an ExecutionPlan —
+# the failure modes the static verifier (repro.analysis) exists to catch.
+# ``mutate_plan`` returns a mutated deep copy (via the plan's own JSON
+# round trip, so mutants also exercise serialization) or None when the
+# operator has no applicable site in the plan. The verifier must flag every
+# mutant with at least one ERROR-level finding; the CLI's mutation corpus
+# and check_regression.py gate that kill rate at 100%.
+# ---------------------------------------------------------------------------
+
+def _comm_sites(plan, ops) -> list:
+    return [(j, idx) for j, stream in enumerate(plan.per_stage)
+            for idx, ins in enumerate(stream) if ins.op in ops]
+
+
+def _mut_drop_wait(plan, rng):
+    """Remove one WAIT: the consuming compute op pops a missing buffer."""
+    sites = _comm_sites(plan, WAIT_OPS)
+    if not sites:
+        return None
+    j, idx = sites[int(rng.integers(len(sites)))]
+    ins = plan.per_stage[j][idx]
+    del plan.per_stage[j][idx]
+    return f"dropped {ins.short()} at stage {j} #{idx}"
+
+
+def _mut_swap_sends(plan, rng):
+    """Swap two sends on one directed channel: the receiver still expects
+    the original order — head-of-line deadlock on an in-order link."""
+    by_channel = defaultdict(list)
+    for j, idx in _comm_sites(plan, SEND_OPS):
+        ins = plan.per_stage[j][idx]
+        by_channel[(j, ins.peer)].append(idx)
+    chans = [(ch, idxs) for ch, idxs in sorted(by_channel.items())
+             if len(idxs) >= 2]
+    if not chans:
+        return None
+    (j, peer), idxs = chans[int(rng.integers(len(chans)))]
+    a, b = sorted(rng.choice(len(idxs), size=2, replace=False).tolist())
+    ia, ib = idxs[a], idxs[b]
+    st = plan.per_stage[j]
+    st[ia], st[ib] = st[ib], st[ia]
+    return (f"swapped {st[ib].short()} (#{ia}) with {st[ia].short()} "
+            f"(#{ib}) on channel {j}->{peer}")
+
+
+def _mut_corrupt_peer(plan, rng):
+    """Re-point one comm Start at a wrong stage: its conjugate op now
+    waits on a message that never arrives."""
+    sites = _comm_sites(plan, COMM_START_OPS)
+    if not sites or plan.n_stages < 2:
+        return None
+    j, idx = sites[int(rng.integers(len(sites)))]
+    ins = plan.per_stage[j][idx]
+    choices = [p for p in range(plan.n_stages) if p != ins.peer]
+    peer = choices[int(rng.integers(len(choices)))]
+    plan.per_stage[j][idx] = replace(ins, peer=peer)
+    return (f"re-pointed {ins.short()} at stage {j} #{idx} to peer {peer}")
+
+
+def _mut_inflate_shape(plan, rng):
+    """Inflate one comm Start's tensor shape: the conjugate endpoint and
+    the MicroBatchSpec disagree with it (ragged buffers at runtime)."""
+    from dataclasses import replace
+
+    from repro.core.instructions import COMM_START_OPS
+    sites = [(j, idx) for j, idx in _comm_sites(plan, COMM_START_OPS)
+             if plan.per_stage[j][idx].shape is not None]
+    if not sites:
+        return None
+    j, idx = sites[int(rng.integers(len(sites)))]
+    ins = plan.per_stage[j][idx]
+    s = tuple(ins.shape)
+    inflated = (s[0], s[1] * 2 + 64) + s[2:]
+    plan.per_stage[j][idx] = replace(ins, shape=inflated)
+    return (f"inflated {ins.short()} shape {s} -> {inflated} "
+            f"at stage {j} #{idx}")
+
+
+def _mut_drop_opt(plan, rng):
+    """Remove one REDUCE_AND_STEP: that stage never runs the optimizer."""
+    sites = [(j, idx) for j, stream in enumerate(plan.per_stage)
+             for idx, ins in enumerate(stream)
+             if ins.op is Op.REDUCE_AND_STEP]
+    if not sites:
+        return None
+    j, idx = sites[int(rng.integers(len(sites)))]
+    del plan.per_stage[j][idx]
+    return f"dropped REDUCE_AND_STEP at stage {j} #{idx}"
+
+
+def _mut_duplicate_send(plan, rng):
+    """Duplicate one send Start: the second pops an already-consumed
+    buffer (use-after-send) and the peer has no second recv."""
+    sites = _comm_sites(plan, SEND_OPS)
+    if not sites:
+        return None
+    j, idx = sites[int(rng.integers(len(sites)))]
+    ins = plan.per_stage[j][idx]
+    plan.per_stage[j].insert(idx + 1, ins)
+    return f"duplicated {ins.short()} at stage {j} #{idx}"
+
+
+def _mut_corrupt_injection_meta(plan, rng):
+    """Drop one entry from meta['injection_order']: mesh/pipelined
+    backends would inject a micro-batch set that misses the plan's."""
+    inj = plan.meta.get("injection_order")
+    if not inj:
+        return None
+    k = int(rng.integers(len(inj)))
+    dropped = inj[k]
+    plan.meta["injection_order"] = [x for i, x in enumerate(inj) if i != k]
+    return f"dropped mb {dropped} from meta injection_order"
+
+
+PLAN_MUTATIONS: dict[str, Callable] = {
+    "drop_wait": _mut_drop_wait,
+    "swap_sends": _mut_swap_sends,
+    "corrupt_peer": _mut_corrupt_peer,
+    "inflate_shape": _mut_inflate_shape,
+    "drop_opt": _mut_drop_opt,
+    "duplicate_send": _mut_duplicate_send,
+    "corrupt_injection_meta": _mut_corrupt_injection_meta,
+}
+
+
+def mutate_plan(plan, operator: str, seed: int = 0):
+    """Apply one named mutation operator to a deep copy of ``plan``.
+
+    Returns ``(mutant, description)`` or None if the operator has no
+    applicable site. Deterministic in ``(plan, operator, seed)``.
+    """
+    if operator not in PLAN_MUTATIONS:
+        raise ValueError(f"unknown plan mutation {operator!r}; "
+                         f"have {sorted(PLAN_MUTATIONS)}")
+    mutant = ExecutionPlan.from_json(plan.to_json())
+    op_id = sorted(PLAN_MUTATIONS).index(operator)
+    rng = np.random.default_rng([int(seed), 0xD3AD, op_id])
+    desc = PLAN_MUTATIONS[operator](mutant, rng)
+    if desc is None:
+        return None
+    return mutant, f"{operator}: {desc}"

@@ -60,8 +60,8 @@ def _sequential(stage_fn, stage_params, xs, n_stages):
     """1-device fallback: same math, no collectives."""
     h = xs
     for s in range(n_stages):
-        w = jax.tree.map(lambda a: a[s], stage_params)
-        h = jax.vmap(lambda hb: stage_fn(w, hb, s))(h)
+        w = jax.tree.map(lambda a, s=s: a[s], stage_params)
+        h = jax.vmap(lambda hb, w=w, s=s: stage_fn(w, hb, s))(h)
     return h
 
 

@@ -74,13 +74,12 @@ def ambient_mesh() -> Optional[Mesh]:
     mesh = _jax_compat.current_set_mesh()
     if mesh is not None:
         return mesh
-    try:  # legacy thread resource env (jax 0.4.x `with mesh:`)
+    # legacy thread resource env (jax 0.4.x `with mesh:`)
+    with contextlib.suppress(Exception):
         from jax._src import mesh as mesh_lib
         phys = mesh_lib.thread_resources.env.physical_mesh
         if phys is not None and not phys.empty:
             return phys
-    except Exception:
-        pass
     return None
 
 

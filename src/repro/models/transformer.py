@@ -205,8 +205,8 @@ def stack_fwd(params, h, cfg: ArchConfig, *,
         # (a scanned while-carry accumulator collapses them — DESIGN §5)
         new_caches, auxs = [], []
         for i in range(cfg.n_periods):
-            xs_i = (jax.tree.map(lambda x: x[i], params),
-                    jax.tree.map(lambda x: x[i], cache_xs))
+            xs_i = (jax.tree.map(lambda x, i=i: x[i], params),
+                    jax.tree.map(lambda x, i=i: x[i], cache_xs))
             h, (nc, aux) = period_fn(h, xs_i)
             new_caches.append(nc)
             auxs.append(aux)

@@ -202,7 +202,7 @@ def load_latest_valid(ckpt_dir: str | Path, tree_like, shardings=None):
             return load(ckpt_dir, tree_like, step, shardings)
         except (CheckpointCorruptError, KeyError, ValueError, TypeError) as e:
             warnings.warn(f"checkpoint step {step} under {ckpt_dir} not "
-                          f"restorable ({e!r}); trying previous")
+                          f"restorable ({e!r}); trying previous", stacklevel=2)
             last_err = e
     raise FileNotFoundError(
         f"no restorable checkpoint under {ckpt_dir}: {last_err!r}")
@@ -220,7 +220,7 @@ def restore_or_init(ckpt_dir, init_fn, shardings=None):
         state, manifest = load_latest_valid(ckpt_dir, like, shardings)
     except (FileNotFoundError, KeyError, ValueError, TypeError) as e:
         warnings.warn(f"no checkpoint under {ckpt_dir} is compatible with "
-                      f"the current model ({e!r}); initializing fresh")
+                      f"the current model ({e!r}); initializing fresh", stacklevel=2)
         return init_fn(), 0
     # structural check: leaf counts must agree before zip-comparing shapes
     # (zip silently truncates on ragged inputs)
@@ -228,11 +228,11 @@ def restore_or_init(ckpt_dir, init_fn, shardings=None):
     state_leaves = jax.tree.leaves(state)
     if len(like_leaves) != len(state_leaves):
         warnings.warn(f"checkpoint has {len(state_leaves)} leaves but model "
-                      f"has {len(like_leaves)}; initializing fresh")
+                      f"has {len(like_leaves)}; initializing fresh", stacklevel=2)
         return init_fn(), 0
     for a, b in zip(like_leaves, state_leaves):
         if tuple(a.shape) != tuple(b.shape):
             warnings.warn(f"checkpoint shapes mismatch current model "
-                          f"({a.shape} vs {b.shape}); initializing fresh")
+                          f"({a.shape} vs {b.shape}); initializing fresh", stacklevel=2)
             return init_fn(), 0
     return state, manifest["step"]

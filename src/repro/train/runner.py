@@ -48,6 +48,7 @@ model's learned scales track the real machine.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -112,6 +113,12 @@ class RunnerConfig:
                                      # destroy plan determinism for nothing
     calibrate: bool = False          # online cost-model calibration
     exec_timeout: float = 120.0      # per-channel executor timeout
+    strict_verify: bool = False      # backends statically verify each plan
+                                     # (repro.analysis) and refuse ERROR-
+                                     # level ones before executing; pair
+                                     # with PlannerConfig.verify_plans to
+                                     # also fail at plan time, off the
+                                     # critical path in the planner pool
 
 
 class DatasetStream:
@@ -287,10 +294,8 @@ class PlanAheadRunner:
 
     def _reset_pool(self) -> None:
         if self.pool is not None:
-            try:
+            with contextlib.suppress(Exception):
                 self.pool.shutdown()
-            except Exception:
-                pass
         self.pool = PlannerPool(
             self.store, n_workers=max(2, self.rcfg.lookahead + 1),
             use_processes=self.rcfg.use_processes)
@@ -453,7 +458,7 @@ class PlanAheadRunner:
             except FileNotFoundError:
                 warnings.warn(
                     f"iteration {it}: state lost but no restorable "
-                    "checkpoint — retrying with in-memory params")
+                    "checkpoint — retrying with in-memory params", stacklevel=2)
                 stats.recoveries.append(
                     {"iter": it, "kind": "retry_no_checkpoint",
                      "fault": repr(err)})
@@ -474,7 +479,7 @@ class PlanAheadRunner:
                       extra={"emergency": True})
         except Exception as e:   # noqa: BLE001 — reporting path
             warnings.warn(f"emergency checkpoint at iteration {it} "
-                          f"failed: {e!r}")
+                          f"failed: {e!r}", stacklevel=2)
 
     # ------------------------------ run --------------------------------
     def run(self):
@@ -494,7 +499,8 @@ class PlanAheadRunner:
         self.backend = make_backend(
             rcfg.backend, cfg, pcfg.n_stages, impl=rcfg.impl,
             step_cache=self.step_cache, use_executor=rcfg.use_executor,
-            exec_timeout=rcfg.exec_timeout, mesh=self.mesh)
+            exec_timeout=rcfg.exec_timeout, mesh=self.mesh,
+            strict=rcfg.strict_verify)
         opt = self.backend.place_opt_state(opt)
 
         end = start + rcfg.n_iters
@@ -572,7 +578,8 @@ class PlanAheadRunner:
                 attempts = 0
 
                 scale = 1.0 / max(w_sum, 1.0)
-                grads = jax.tree.map(lambda g: g * scale, grads)
+                grads = jax.tree.map(lambda g, scale=scale: g * scale,
+                                     grads)
                 params, opt, om = self.backend.optimizer_step(
                     params, grads, opt, self.opt_cfg)
                 dt = time.perf_counter() - t0

@@ -215,7 +215,7 @@ def test_plan_ahead_matches_synchronous_on_2d_stream():
     assert _tree_equal(p_async, p_sync)
     assert all(np.isfinite(h["loss"]) for h in h_async)
     # 2D cache keys: every compiled stage fn is keyed (mbs, enc, dec)
-    fwd_keys = [k for k in shared.keys() if k[0] == "fwd"]
+    fwd_keys = shared.keys_for("fwd")
     assert fwd_keys and all(len(k) == 6 for k in fwd_keys)
     assert all(k[3] in PAL.mbs_buckets and k[4] in PAL.seq_buckets
                and k[5] in PAL.seq_buckets for k in fwd_keys)

@@ -257,6 +257,6 @@ def test_kernel_grads_flow():
     q, k, v = _qkv(b, t, h, d, jnp.float32)
     for impl in ("ref", "interpret"):
         g = jax.grad(
-            lambda q: ops.attention(q, k, v, impl=impl,
+            lambda q, impl=impl: ops.attention(q, k, v, impl=impl,
                                     block_q=16, block_kv=16).sum())(q)
         assert np.isfinite(np.asarray(g)).all()

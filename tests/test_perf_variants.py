@@ -97,7 +97,8 @@ def test_remat_policy_loss_unchanged():
     for pol in ("nothing", "dots", "everything"):
         cfg_p = dataclasses.replace(cfg, remat_policy=pol)
         (l, _), g = jax.value_and_grad(
-            lambda p: MD.loss_fn(p, b, cfg_p), has_aux=True)(params)
+            lambda p, cfg_p=cfg_p: MD.loss_fn(p, b, cfg_p),
+            has_aux=True)(params)
         losses.append(float(l))
         assert np.isfinite(float(l))
     assert max(losses) - min(losses) < 1e-5

@@ -63,7 +63,7 @@ def test_step_cache_bounded_by_palette():
     assert len(history) == 8
     assert cache.misses == len(cache)
     assert len(cache) <= PAL.n_shapes()
-    grad_keys = {k for k in cache.keys() if k[0] == "grad"}
+    grad_keys = cache.keys_for("grad")
     assert all(
         (mbs in PAL.mbs_buckets and seq in PAL.seq_buckets)
         for _, _ns, _impl, mbs, seq in grad_keys)

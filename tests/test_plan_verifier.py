@@ -1,0 +1,335 @@
+"""Static plan verifier (repro.analysis): fuzz cleanliness of planner
+plans, the naive-baseline deadlock counterexample (paper Fig. 8b), the
+chaos mutation-kill suite, JSON round-trip fidelity, and strict-mode
+refusal in the executor/backend."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (
+    PlanVerificationError,
+    Severity,
+    assert_plan_clean,
+    build_hb_graph,
+    verify_plan,
+)
+from repro.configs.base import get_arch, reduced
+from repro.core import comm_plan
+from repro.core.cost_model import AnalyticCostModel
+from repro.core.executor import (
+    PipelineExecutor,
+    PlanRejectedError,
+    StageCallbacks,
+)
+from repro.core.instructions import (
+    ExecutionPlan,
+    Instr,
+    MicroBatchSpec,
+    Op,
+    RecomputePolicy,
+)
+from repro.core.planner import PlannerConfig, plan_iteration
+from repro.core.schedule import schedule_adaptive
+from repro.core.shapes import ShapePalette
+from repro.core.simulator import simulate
+from repro.dist.chaos import PLAN_MUTATIONS, mutate_plan
+
+GPT = dataclasses.replace(reduced(get_arch("gpt-paper")), vocab=2048,
+                          d_model=128, n_heads=4, d_head=32, d_ff=256)
+T5 = dataclasses.replace(reduced(get_arch("t5-paper")), n_layers=2,
+                         vocab=2048, d_model=128, n_heads=4, d_head=32,
+                         d_ff=256)
+
+
+def _plan(lengths, cfg, n_stages, rng, schedule="adaptive"):
+    """Planner-emitted plan over a randomized palette."""
+    align = int(rng.choice([32, 64]))
+    pal = ShapePalette.build(min_seq=align, max_seq=512, seq_align=align,
+                             max_mbs=int(rng.choice([8, 16])))
+    cost = AnalyticCostModel(cfg, n_stages=n_stages)
+    pcfg = PlannerConfig(n_stages=n_stages, d_model=cfg.d_model,
+                        palette=pal, schedule=schedule)
+    itp = plan_iteration(lengths, cost, pcfg)
+    return itp, pal, pcfg
+
+
+# ------------------------- fuzz: planner plans are clean ------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_planner_plans_verify_clean_1d(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, 28))
+    lengths = rng.integers(16, 512, size=n)
+    n_stages = int(rng.integers(2, 5))
+    schedule = str(rng.choice(["adaptive", "1f1b"]))
+    itp, pal, pcfg = _plan(lengths, GPT, n_stages, rng, schedule)
+    for p in itp.replica_plans:
+        rep = verify_plan(p, palette=pal, mem_limit=pcfg.device_mem)
+        assert not rep.findings, rep.summary()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_planner_plans_verify_clean_2d(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, 20))
+    lengths = np.stack([rng.integers(16, 384, size=n),
+                        rng.integers(16, 256, size=n)], axis=1)
+    itp, pal, pcfg = _plan(lengths, T5, 2, rng)
+    for p in itp.replica_plans:
+        rep = verify_plan(p, palette=pal, mem_limit=pcfg.device_mem)
+        assert not rep.findings, rep.summary()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_planner_plans_are_acyclic(seed):
+    """Co-scheduled §6 streams never carry an HB cycle, for random
+    lengths, stage counts and schedules — the planner invariant the
+    verifier re-proves statically."""
+    rng = np.random.default_rng(seed)
+    n_stages = int(rng.integers(2, 6))
+    schedule = str(rng.choice(["adaptive", "1f1b"]))
+    itp, _, _ = _plan(rng.integers(16, 512, size=int(rng.integers(6, 24))),
+                      GPT, n_stages, rng, schedule)
+    for plan in itp.replica_plans:
+        g = build_hb_graph(plan)
+        assert g.find_cycle() is None
+        assert not g.unpaired
+
+
+# ------------------- the paper's Fig. 8b deadlock, statically -------------
+
+
+def test_naive_baseline_deadlock_counterexample():
+    for seed in range(64):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(4, 10))
+        c = int(rng.integers(3, 6))
+        tf = rng.uniform(0.5, 2.0, size=(m, c))
+        tb = tf * 2.0
+        am = rng.uniform(0.5, 1.5, size=(m, c))
+        order = schedule_adaptive(m, c, am, 1e9)
+        sim = simulate(order, tf, tb, act_mem=am)
+        specs = [MicroBatchSpec(i, [i], 1, 64, float(tf[i, 0]),
+                                float(tb[i, 0]), float(am[i, 0]))
+                 for i in range(m)]
+        naive = comm_plan.build_instructions(order, specs, sim, d_model=8,
+                                            naive=True)
+        if not comm_plan.check_order_consistency(naive):
+            continue  # consistent by luck: no deadlock to convict
+        plan = ExecutionPlan(n_stages=c, micro_batches=specs,
+                             per_stage=naive,
+                             recompute=RecomputePolicy.FULL)
+        rep = verify_plan(plan)
+        cycle = rep.meta.get("hb_cycle")
+        assert cycle, "inconsistent naive plan must carry an HB cycle"
+        assert len(cycle) >= 2
+        assert any(f.rule == "hb-cycle" and f.severity == Severity.ERROR
+                   for f in rep.findings)
+        # the counterexample names concrete instructions, not bare ids
+        assert all("stage" in line and "#" in line for line in cycle)
+        return
+    pytest.fail("no order-inconsistent naive plan in 64 seeds")
+
+
+# -------------------------- mutation-kill suite ---------------------------
+
+
+@pytest.fixture(scope="module")
+def golden():
+    rng = np.random.default_rng(0)
+    itp, pal, pcfg = _plan(rng.integers(32, 512, size=16), GPT, 4, rng)
+    return itp.replica_plans[0], pal, pcfg.device_mem
+
+
+@pytest.mark.parametrize("operator", sorted(PLAN_MUTATIONS))
+def test_mutation_killed(operator, golden):
+    plan, pal, mem = golden
+    killed = 0
+    applicable = 0
+    for seed in range(4):
+        r = mutate_plan(plan, operator, seed=seed)
+        if r is None:
+            continue
+        mutant, desc = r
+        applicable += 1
+        rep = verify_plan(mutant, palette=pal, mem_limit=mem)
+        assert rep.errors, f"survived: {desc}"
+        killed += 1
+    assert applicable > 0, f"{operator} never applicable on golden plan"
+    assert killed == applicable
+
+
+def test_mutation_determinism(golden):
+    plan, _, _ = golden
+    a = mutate_plan(plan, "drop_wait", seed=7)
+    b = mutate_plan(plan, "drop_wait", seed=7)
+    assert a is not None and b is not None
+    assert a[0].to_json() == b[0].to_json()
+    assert a[1] == b[1]
+
+
+def test_assert_plan_clean_raises(golden):
+    plan, pal, mem = golden
+    assert_plan_clean(plan, palette=pal, mem_limit=mem)
+    mutant, _ = mutate_plan(plan, "corrupt_peer", seed=1)
+    with pytest.raises(PlanVerificationError) as ei:
+        assert_plan_clean(mutant, palette=pal, mem_limit=mem)
+    assert ei.value.report.errors
+
+
+# ------------------------ lint + memory unit checks -----------------------
+
+
+def test_memory_limit_error(golden):
+    plan, _, _ = golden
+    findings, peaks = __import__(
+        "repro.analysis.memory", fromlist=["analyze_memory"]
+    ).analyze_memory(plan, mem_limit=max(plan.predicted_peak_mem) / 2)
+    assert any(f.rule == "mem-limit-exceeded"
+               and f.severity == Severity.ERROR for f in findings)
+    assert len(peaks) == plan.n_stages
+    # static liveness agrees bit-exactly with the simulator's prediction
+    clean, peaks2 = __import__(
+        "repro.analysis.memory", fromlist=["analyze_memory"]
+    ).analyze_memory(plan)
+    assert not clean
+    assert peaks2 == pytest.approx(plan.predicted_peak_mem, rel=1e-12)
+
+
+def test_lint_flags_missing_opt(golden):
+    plan, pal, mem = golden
+    stripped = ExecutionPlan(
+        n_stages=plan.n_stages, micro_batches=plan.micro_batches,
+        per_stage=[[i for i in s if i.op is not Op.REDUCE_AND_STEP]
+                   for s in plan.per_stage],
+        recompute=plan.recompute,
+        predicted_makespan=plan.predicted_makespan,
+        predicted_peak_mem=plan.predicted_peak_mem, meta=dict(plan.meta))
+    rep = verify_plan(stripped, palette=pal, mem_limit=mem)
+    assert any(f.rule == "missing-opt" for f in rep.errors)
+
+
+def test_empty_plan_is_clean():
+    plan = ExecutionPlan(n_stages=2, micro_batches=[],
+                         per_stage=[[], []],
+                         recompute=RecomputePolicy.FULL,
+                         predicted_peak_mem=[0.0, 0.0],
+                         meta={"injection_order": []})
+    rep = verify_plan(plan)
+    assert rep.ok()
+
+
+# ----------------------- serialization round trip -------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_plan_json_round_trip_fixed_point(seed):
+    rng = np.random.default_rng(seed)
+    itp, _, _ = _plan(rng.integers(16, 512, size=10), GPT, 2, rng)
+    plan = itp.replica_plans[0]
+    # numpy-laced metadata must survive (normalized) round trips
+    plan.meta["np"] = {"arr": np.arange(3), "scalar": np.float32(1.5),
+                       "i": np.int64(7), "nested": [(1, 2), np.int32(3)]}
+    j1 = plan.to_json()
+    p2 = ExecutionPlan.from_json(j1)
+    j2 = p2.to_json()
+    assert j1 == j2, "one round trip must be a serialization fixed point"
+    p3 = ExecutionPlan.from_json(j2)
+    assert p2 == p3
+    assert json.loads(j1)["meta"]["np"] == {"arr": [0, 1, 2], "scalar": 1.5,
+                                            "i": 7,
+                                            "nested": [[1, 2], 3]}
+
+
+def test_round_trip_preserves_semantics(golden):
+    plan, pal, mem = golden
+    p2 = ExecutionPlan.from_json(plan.to_json())
+    assert p2.per_stage == plan.per_stage
+    assert p2.micro_batches == plan.micro_batches
+    assert p2.meta["injection_order"] == plan.meta["injection_order"]
+    assert not verify_plan(p2, palette=pal, mem_limit=mem).findings
+
+
+def test_instr_short_rendering():
+    assert Instr(Op.FORWARD, 3).short() == "F3"
+    assert Instr(Op.BACKWARD, 0).short() == "B0"
+    assert Instr(Op.SEND_ACT_START, 2, peer=1).short() == "SA+2->1"
+    assert Instr(Op.RECV_GRAD_START, 5, peer=3).short() == "RG+5<-3"
+    assert Instr(Op.WAIT_RECV_ACT, 1, peer=0).short() == "RA!1<-0"
+    assert Instr(Op.REDUCE_AND_STEP).short() == "OPT"
+    assert Instr(Op.SEND_GRAD_START, 4).short() == "SG+4->?"
+
+
+# ------------------------ wiring: planner / executor ----------------------
+
+
+def test_planner_verify_plans_annotates_meta():
+    rng = np.random.default_rng(3)
+    pal = ShapePalette.build(min_seq=64, max_seq=512, seq_align=64,
+                             max_mbs=16)
+    cost = AnalyticCostModel(GPT, n_stages=2)
+    pcfg = PlannerConfig(n_stages=2, d_model=GPT.d_model, palette=pal,
+                        verify_plans=True)
+    itp = plan_iteration(rng.integers(16, 512, size=12), cost, pcfg)
+    for p in itp.replica_plans:
+        v = p.meta["verification"]
+        assert v["counts"]["ERROR"] == 0
+        assert v["worst"] is None
+
+
+def test_strict_executor_rejects_mutant(golden):
+    plan, _, _ = golden
+    mutant, _ = mutate_plan(plan, "drop_wait", seed=0)
+    noop = StageCallbacks(lambda *a: None, lambda *a: None, lambda: None)
+    cbs = [noop] * plan.n_stages
+    with pytest.raises(PlanRejectedError) as ei:
+        PipelineExecutor(mutant, cbs, strict=True).run()
+    assert ei.value.report.errors
+
+
+def test_strict_backend_rejects_mutant(golden):
+    from repro.dist.backend import make_backend
+    plan, _, _ = golden
+    mutant, _ = mutate_plan(plan, "swap_sends", seed=0)
+    be = make_backend("threads", GPT, plan.n_stages, strict=True)
+    with pytest.raises(PlanRejectedError):
+        be.execute_plan(mutant, params=None, batches={})
+
+
+# --------------------------------- CLI ------------------------------------
+
+
+def test_cli_verifies_plan_files(tmp_path, golden):
+    from repro.analysis.__main__ import run
+    plan, _, _ = golden
+    good = tmp_path / "good.json"
+    good.write_text(plan.to_json())
+    bad = tmp_path / "bad.json"
+    bad.write_text(mutate_plan(plan, "inflate_shape", seed=0)[0].to_json())
+    out = tmp_path / "report.json"
+
+    report, code = run([str(good), "--out", str(out)])
+    assert code == 0
+    assert report["files"][0]["counts"]["ERROR"] == 0
+    assert json.loads(out.read_text())["files"][0]["worst"] is None
+
+    report, code = run([str(good), str(bad)])
+    assert code == 1
+    assert report["files"][1]["counts"]["ERROR"] > 0
+
+
+def test_cli_naive_demo(tmp_path):
+    from repro.analysis.__main__ import run
+    out = tmp_path / "naive.json"
+    report, code = run(["--naive-demo", "--out", str(out)])
+    assert code == 0
+    assert report["naive"]["cycle_found"]
+    assert report["naive"]["cycle_len"] >= 2
