@@ -28,12 +28,24 @@ must match fault-free to 1%, and calibration must reduce the error.
 
 Records go to ``BENCH_elastic.json`` (``--smoke``: a smaller grid to
 ``BENCH_elastic_smoke.json``, used by CI).
+
+``--processes`` (ISSUE 10) runs the *process fault domain* instead: one OS
+process per DP replica over ``repro.dist.cluster``, with chaos delivered
+as real ``os.kill(pid, SIGKILL)`` — a replica worker mid-run, then the
+coordinator itself (forcing an election + checkpoint restore). Hard gates
+at generation time (mirrored by ``check_regression.py::check_elastic_procs``):
+every injected kill fires against a verifiably dead pid, both targets
+(replica and coordinator) are covered, at least one election happens, the
+recovered trajectory matches the process-domain fault-free run to 1%, and
+teardown leaves no orphaned processes or checkpoint tmp dirs behind.
+Records go to ``BENCH_elastic_procs[_smoke].json``.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import shutil
 import tempfile
 from pathlib import Path
 
@@ -57,6 +69,10 @@ PAL = ShapePalette.build(min_seq=32, max_seq=128, seq_align=32, max_mbs=8)
 
 def bench_json_path(smoke: bool) -> Path:
     return REPO_ROOT / f"BENCH_elastic{'_smoke' if smoke else ''}.json"
+
+
+def procs_json_path(smoke: bool) -> Path:
+    return REPO_ROOT / f"BENCH_elastic_procs{'_smoke' if smoke else ''}.json"
 
 
 def make_stream(global_tokens: int, seed: int = 5) -> MultiTaskStream:
@@ -180,6 +196,115 @@ def run_calibration(n_iters: int, global_tokens: int) -> dict:
     return rec
 
 
+# ------------------------- process fault domain -------------------------
+
+def run_process_domain(n_iters: int, global_tokens: int, dp_size: int = 3,
+                       chaos=None):
+    """One full run in the process fault domain; returns
+    ``(last-occurrence losses by iter, raw history, stats)``."""
+    from repro.dist.cluster import ClusterConfig, run_process_cluster
+
+    cm = AnalyticCostModel(CFG, n_stages=1)
+    pcfg = PlannerConfig(n_stages=1, dp_size=dp_size, d_model=CFG.d_model,
+                         palette=PAL)
+    rcfg = RunnerConfig(n_iters=n_iters, use_executor=False, log_every=0,
+                        ckpt_every=2, exec_timeout=60.0)
+    _, history, stats = run_process_cluster(
+        CFG, cm, pcfg, rcfg, make_stream(global_tokens), chaos=chaos,
+        ccfg=ClusterConfig(n_replicas=dp_size, run_timeout_s=420.0))
+    losses = _last_losses(history)
+    if sorted(losses) != list(range(n_iters)):
+        raise SystemExit(f"process run did not complete every iteration: "
+                         f"{sorted(losses)}")
+    return losses, history, stats
+
+
+def procs_kill_trace() -> FaultSchedule:
+    """The ISSUE 10 acceptance trace: SIGKILL a replica worker
+    mid-iteration, then SIGKILL the coordinator (forcing an election)."""
+    return FaultSchedule([
+        FaultEvent(2, FaultKind.KILL_PROCESS, replica=2),
+        FaultEvent(5, FaultKind.KILL_PROCESS, target="coordinator"),
+    ])
+
+
+def main_processes(smoke: bool = False):
+    n_iters = 8 if smoke else 12
+    global_tokens = 512 if smoke else 1024
+    records = []
+
+    free_losses, free_hist, free_stats = run_process_domain(
+        n_iters, global_tokens)
+    shutil.rmtree(free_stats.cluster["rundir"], ignore_errors=True)
+    rec = {"mode": "procs_fault_free", "iters": n_iters,
+           **_throughput(free_hist, free_stats)}
+    rec["losses"] = [round(free_losses[i], 6) for i in range(n_iters)]
+    print(json.dumps(rec), flush=True)
+    records.append(rec)
+
+    chaos = procs_kill_trace()
+    losses, history, stats = run_process_domain(
+        n_iters, global_tokens, chaos=chaos)
+    cl = stats.cluster
+    shutil.rmtree(cl["rundir"], ignore_errors=True)
+    faulted = np.array([losses[i] for i in range(n_iters)])
+    free = np.array([free_losses[i] for i in range(n_iters)])
+    traj_err = float(np.max(np.abs(faulted - free) / np.abs(free)))
+    rec = {
+        "mode": "procs_faulted",
+        "iters": n_iters,
+        **_throughput(history, stats),
+        "kills": cl["kills"],
+        "elections": cl["elections"],
+        "final_alive": cl["final_alive"],
+        "orphans": len(cl["orphans"]),
+        "tmp_dirs_left": len(cl["tmp_dirs_left"]),
+        "trajectory_max_rel_err": round(traj_err, 6),
+    }
+    print(json.dumps(rec), flush=True)
+    records.append(rec)
+
+    # hard gates — the ISSUE 10 acceptance criteria, enforced at
+    # generation time and re-checked against the committed baseline by
+    # check_regression.py::check_elastic_procs
+    if chaos.pending():
+        raise SystemExit(f"declared kills never fired: {chaos.describe()}")
+    if not all(k["verified_dead"] for k in cl["kills"]):
+        raise SystemExit(f"a kill was not verified dead: {cl['kills']}")
+    if {k["target"] for k in cl["kills"]} != {"replica", "coordinator"}:
+        raise SystemExit(f"kills must cover both targets: {cl['kills']}")
+    if cl["elections"] < 1:
+        raise SystemExit("coordinator death did not trigger an election")
+    if cl["orphans"] or cl["tmp_dirs_left"]:
+        raise SystemExit(f"teardown left debris: orphans={cl['orphans']} "
+                         f"tmp={cl['tmp_dirs_left']}")
+    if traj_err > 1e-2:
+        raise SystemExit(
+            f"process-domain recovered trajectory diverged from fault-free: "
+            f"max rel err {traj_err:.4f} > 1e-2")
+
+    summary = {
+        "mode": "_summary",
+        "iters": n_iters,
+        "n_kills": len(cl["kills"]),
+        "kills_verified_dead": True,
+        "targets": sorted({k["target"] for k in cl["kills"]}),
+        "elections": cl["elections"],
+        "orphans": 0,
+        "tmp_dirs_left": 0,
+        "trajectory_max_rel_err": rec["trajectory_max_rel_err"],
+        "faulted_over_fault_free": round(
+            rec["tokens_per_s"] / max(records[0]["tokens_per_s"], 1e-9), 3),
+        "smoke": smoke,
+    }
+    print(json.dumps(summary), flush=True)
+    records.append(summary)
+
+    out = procs_json_path(smoke)
+    out.write_text(json.dumps(records, indent=2) + "\n")
+    print(f"wrote {out}", flush=True)
+
+
 def main(smoke: bool = False):
     n_iters = 8 if smoke else 16
     global_tokens = 512 if smoke else 1024
@@ -219,4 +344,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small CI variant (writes BENCH_elastic_smoke.json)")
-    main(**vars(ap.parse_args()))
+    ap.add_argument("--processes", action="store_true",
+                    help="process fault domain: one OS process per replica, "
+                         "real SIGKILL chaos + coordinator election "
+                         "(writes BENCH_elastic_procs[_smoke].json)")
+    args = ap.parse_args()
+    if args.processes:
+        main_processes(smoke=args.smoke)
+    else:
+        main(smoke=args.smoke)

@@ -50,6 +50,13 @@ committed under ``benchmarks/baselines/`` and exits non-zero on regression:
   cost-model error — plus the faulted/fault-free throughput ratio
   (machine-normalized, both runs on the same box) gated at ``--factor``.
   Absolute recovery seconds are informational.
+- **elastic-procs** (``BENCH_elastic_procs_smoke.json``): the process
+  fault domain (``bench_elastic --processes``, ISSUE 10) — real OS
+  process per replica, real SIGKILLs. Hard machine-independent gates:
+  every injected kill fired against a verified-dead pid, kills cover both
+  replica and coordinator targets, coordinator death elected a successor,
+  the recovered trajectory matches the process-domain fault-free run to
+  1%, and no orphaned processes or checkpoint tmp dirs survive teardown.
 
 Usage (CI runs exactly this, from the repo root, after the ``--smoke``
 benches):
@@ -373,6 +380,105 @@ def check_elastic(baseline: list, current: list, factor: float) -> list[str]:
     return failures
 
 
+def check_elastic_procs(baseline: list, current: list, factor: float) -> list[str]:
+    """Process-fault-domain gate (BENCH_elastic_procs_smoke.json, ISSUE 10).
+
+    Hard machine-independent invariants: every injected SIGKILL fired
+    against a verifiably dead pid (not simulated silence), the kills cover
+    both targets (a replica worker and the coordinator), coordinator death
+    triggered at least one election, the recovered loss trajectory matches
+    the process-domain fault-free run to 1%, and teardown left no orphaned
+    processes or checkpoint tmp dirs. The faulted/fault-free throughput
+    ratio is machine-normalized and gated at ``--factor`` vs baseline."""
+    failures = []
+    cur_by = {r["mode"]: r for r in current}
+    base_by = {r["mode"]: r for r in baseline}
+    for mode in ("procs_fault_free", "procs_faulted", "_summary"):
+        if mode not in cur_by:
+            failures.append(f"elastic-procs record {mode!r} missing from current run")
+    if failures:
+        return failures
+    cur, base = cur_by["_summary"], base_by.get("_summary", {})
+
+    n_kills = cur.get("n_kills", 0)
+    want_kills = base.get("n_kills", 2)
+    verified = cur.get("kills_verified_dead", False)
+    ok = n_kills >= want_kills and verified
+    print(
+        f"[{'ok' if ok else 'FAIL'}] elastic-procs kills: {n_kills} "
+        f"delivered (baseline {want_kills}), verified_dead={verified}"
+    )
+    if n_kills < want_kills:
+        failures.append(
+            f"elastic-procs: only {n_kills}/{want_kills} injected kills fired"
+        )
+    if not verified:
+        failures.append(
+            "elastic-procs: a delivered kill was not verified as a real "
+            "dead pid"
+        )
+
+    targets = set(cur.get("targets", []))
+    ok = targets >= {"replica", "coordinator"}
+    print(
+        f"[{'ok' if ok else 'FAIL'}] elastic-procs kill targets: "
+        f"{sorted(targets)} (need replica + coordinator)"
+    )
+    if not ok:
+        failures.append(f"elastic-procs: kills did not cover both targets ({targets})")
+
+    elections = cur.get("elections", 0)
+    print(
+        f"[{'ok' if elections >= 1 else 'FAIL'}] elastic-procs "
+        f"elections: {elections} (need >= 1)"
+    )
+    if elections < 1:
+        failures.append("elastic-procs: coordinator death did not trigger an election")
+
+    traj = cur["trajectory_max_rel_err"]
+    status = "FAIL" if traj > 1e-2 else "ok"
+    print(
+        f"[{status}] elastic-procs recovered-trajectory max rel err "
+        f"{traj:.2e} (limit 1e-2)"
+    )
+    if traj > 1e-2:
+        failures.append(
+            f"elastic-procs: recovered loss trajectory diverged from "
+            f"fault-free across process corpses ({traj:.2e} > 1e-2)"
+        )
+
+    orphans, tmps = cur.get("orphans", -1), cur.get("tmp_dirs_left", -1)
+    ok = orphans == 0 and tmps == 0
+    print(
+        f"[{'ok' if ok else 'FAIL'}] elastic-procs teardown: "
+        f"{orphans} orphaned processes, {tmps} checkpoint tmp dirs"
+    )
+    if orphans != 0:
+        failures.append(
+            f"elastic-procs: {orphans} orphaned worker processes survived "
+            "teardown"
+        )
+    if tmps != 0:
+        failures.append(f"elastic-procs: {tmps} checkpoint .tmp-* dirs left behind")
+
+    ratio = cur.get("faulted_over_fault_free")
+    base_ratio = base.get("faulted_over_fault_free")
+    if ratio and base_ratio:
+        degraded = base_ratio / max(ratio, 1e-9)
+        status = "FAIL" if degraded > factor else "ok"
+        print(
+            f"[{status}] elastic-procs faulted/fault-free throughput "
+            f"{ratio:.2f}x (baseline {base_ratio:.2f}x, degradation "
+            f"{degraded:.2f}x, limit {factor:.1f}x)"
+        )
+        if degraded > factor:
+            failures.append(
+                f"elastic-procs: throughput-under-kills ratio degraded "
+                f"{degraded:.2f}x (> {factor:.1f}x)"
+            )
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -393,6 +499,11 @@ def main() -> int:
     )
     ap.add_argument(
         "--elastic", type=Path, default=REPO_ROOT / "BENCH_elastic_smoke.json"
+    )
+    ap.add_argument(
+        "--elastic-procs",
+        type=Path,
+        default=REPO_ROOT / "BENCH_elastic_procs_smoke.json",
     )
     ap.add_argument(
         "--verifier", type=Path, default=REPO_ROOT / "BENCH_verifier_smoke.json"
@@ -435,6 +546,11 @@ def main() -> int:
     failures += check_elastic(
         _load(args.baseline_dir / "BENCH_elastic_smoke.json"),
         _load(args.elastic),
+        args.factor,
+    )
+    failures += check_elastic_procs(
+        _load(args.baseline_dir / "BENCH_elastic_procs_smoke.json"),
+        _load(args.elastic_procs),
         args.factor,
     )
     failures += check_verifier(

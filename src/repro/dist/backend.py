@@ -505,5 +505,11 @@ def make_backend(name: str, cfg: ArchConfig, n_stages: int, *,
     if name == "mesh":
         return MeshBackend(cfg, n_stages, impl=impl, step_cache=step_cache,
                            mesh=mesh, strict=strict)
+    if name == "process":
+        raise ValueError(
+            "the process backend is not built by the factory: it needs a "
+            "live cluster coordinator (sockets, membership, election) — "
+            "set RunnerConfig.fault_domain='process' and the runner routes "
+            "through repro.dist.cluster.run_process_cluster instead")
     raise ValueError(f"unknown execution backend {name!r}; "
                      "expected 'threads' or 'mesh'")

@@ -25,6 +25,11 @@ these reduces to "drain, maybe restore, replan over the survivors"):
 - ``PLANNER_CRASH`` / ``PLANNER_LOST`` — corrupt (raise from) or kill
   (never complete) one planner future. The runner must resubmit instead of
   dying on ``future.result``.
+- ``KILL_PROCESS``  — (ISSUE 10) a *real* ``os.kill(pid, SIGKILL)``
+  delivered by the process-cluster driver (:mod:`repro.dist.cluster`) to a
+  replica worker or the coordinator. Nothing is simulated: the target pid
+  is verifiably dead afterwards (:func:`deliver_kill`), and recovery means
+  surviving processes re-forming a smaller topology.
 
 Injection is hook-based: nothing in the production path imports this module
 unless a schedule is passed in, and every event fires **at most once** (the
@@ -33,6 +38,8 @@ threads).
 """
 from __future__ import annotations
 
+import contextlib
+import os
 import threading
 import time
 from collections import defaultdict
@@ -57,6 +64,10 @@ class FaultKind(str, Enum):
     REPLICA_DEAD = "replica_dead"
     PLANNER_CRASH = "planner_crash"
     PLANNER_LOST = "planner_lost"
+    # real process death (ISSUE 10): the driver delivers os.kill(pid,
+    # SIGKILL) to a replica worker or the coordinator of a process-domain
+    # cluster (dist/cluster.py) — not simulated heartbeat silence
+    KILL_PROCESS = "kill_process"
 
 
 @dataclass(frozen=True)
@@ -74,6 +85,7 @@ class FaultEvent:
     op: str = "F"                  # Op.value the executor hook fires on
     micro_batch: int = -1          # -1 = first matching instruction
     state_lost: bool = False
+    target: str = "replica"        # KILL_PROCESS: "replica" | "coordinator"
 
     def describe(self) -> str:
         extra = ""
@@ -83,6 +95,10 @@ class FaultEvent:
             extra += f" delay={self.delay_s:g}s"
         if self.kind == FaultKind.REPLICA_DEAD:
             extra = f" replica={self.replica}"
+        if self.kind == FaultKind.KILL_PROCESS:
+            extra = (f" target={self.target}"
+                     + (f" replica={self.replica}"
+                        if self.target == "replica" else ""))
         if self.state_lost:
             extra += " state_lost"
         return f"{self.kind.value}@it{self.iteration}{extra}"
@@ -184,6 +200,20 @@ class FaultSchedule:
                     return ev
         return None
 
+    # --------------------------- process kills -------------------------
+    def take_process_kills(self, iteration: int) -> list[FaultEvent]:
+        """Claim (each at most once) every ``KILL_PROCESS`` event whose
+        declared iteration has been reached. The cluster *driver* — the
+        process supervising a ``dist/cluster.py`` run — polls this as
+        training progresses and delivers each claimed event as a real
+        ``os.kill(pid, SIGKILL)`` via :func:`deliver_kill`."""
+        out = []
+        for idx, ev in enumerate(self.events):
+            if ev.kind == FaultKind.KILL_PROCESS \
+                    and ev.iteration <= iteration and self._take(idx):
+                out.append(ev)
+        return out
+
     # ------------------------- heartbeat suppression -------------------
     def replica_silent(self, iteration: int, replica: int) -> bool:
         """True when ``replica`` must not heartbeat at ``iteration``
@@ -228,6 +258,38 @@ class FaultSchedule:
 
     def describe(self) -> list[str]:
         return [e.describe() for e in self.events]
+
+
+def deliver_kill(pid: int, wait_s: float = 10.0) -> bool:
+    """Deliver a real ``SIGKILL`` to ``pid`` and wait until the pid is a
+    verified corpse (signal-0 probe raises ``ProcessLookupError``, or the
+    pid is a zombie child awaiting reap — ``waitpid`` would collect it).
+
+    Returns True when the process is verifiably dead within ``wait_s``.
+    This is the KILL_PROCESS delivery path: unlike ``REPLICA_DEAD`` (which
+    merely suppresses heartbeats in-process), the target is an actual OS
+    process and its death is actual, observable kernel state.
+    """
+    import signal
+
+    try:
+        os.kill(pid, signal.SIGKILL)
+    except ProcessLookupError:
+        return True   # already dead
+    deadline = time.monotonic() + wait_s
+    while time.monotonic() < deadline:
+        # reap if it is our child (direct kills from the cluster driver);
+        # WNOHANG returns (0, 0) while the child still runs
+        with contextlib.suppress(ChildProcessError, OSError):
+            wpid, _ = os.waitpid(pid, os.WNOHANG)
+            if wpid == pid:
+                return True
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return True
+        time.sleep(0.01)
+    return False
 
 
 # ---------------------------------------------------------------------------

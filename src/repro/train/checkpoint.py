@@ -76,11 +76,39 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _pid_alive(pid: int) -> bool:
+    """True when ``pid`` is a live process (signal-0 probe). A pid we lack
+    permission to signal is someone else's live process, not an orphan."""
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
 def _sweep_tmp(ckpt_dir: Path) -> None:
-    """Remove orphaned .tmp-* dirs left behind by crashed writers."""
+    """Remove orphaned .tmp-* dirs left behind by *crashed* writers.
+
+    The tmp name embeds the writer's pid (``.tmp-{step}-{pid}-{uuid}``);
+    only dirs whose writer is dead are swept. A concurrent live writer's
+    in-flight tmp — another replica process checkpointing into the same
+    shared directory — is left alone: sweeping it would tear that writer's
+    save between its ``np.save`` and its atomic rename. Unparseable names
+    are left in place (conservative: never delete what we didn't write).
+    """
     for p in ckpt_dir.glob(".tmp-*"):
-        if p.is_dir():
-            shutil.rmtree(p, ignore_errors=True)
+        if not p.is_dir():
+            continue
+        parts = p.name.split("-")
+        try:
+            pid = int(parts[2])
+        except (IndexError, ValueError):
+            continue
+        if _pid_alive(pid):
+            continue
+        shutil.rmtree(p, ignore_errors=True)
 
 
 def save(ckpt_dir: str | Path, step: int, tree, keep: int = 3,

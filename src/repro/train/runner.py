@@ -119,6 +119,12 @@ class RunnerConfig:
                                      # with PlannerConfig.verify_plans to
                                      # also fail at plan time, off the
                                      # critical path in the planner pool
+    fault_domain: str = "thread"     # "thread": faults are in-process
+                                     # simulations (chaos hooks); "process":
+                                     # one OS process per DP replica with
+                                     # socket heartbeats, coordinator
+                                     # election, and real SIGKILL injection
+                                     # (repro.dist.cluster)
 
 
 class DatasetStream:
@@ -181,6 +187,9 @@ class RunnerStats:
     recovery_s: float = 0.0          # wall seconds spent in recovery paths
     recoveries: list = field(default_factory=list)   # event dicts
     calibration: dict = field(default_factory=dict)  # OnlineCalibrator summary
+    cluster: dict = field(default_factory=dict)      # process fault domain:
+                                                     # kills/elections/orphans
+                                                     # (repro.dist.cluster)
 
     @property
     def overlap_fraction(self) -> float:
@@ -207,6 +216,7 @@ class RunnerStats:
             "recovery_s": round(self.recovery_s, 4),
             "recoveries": list(self.recoveries),
             "calibration": dict(self.calibration),
+            "cluster": dict(self.cluster),
         }
 
 
@@ -484,6 +494,14 @@ class PlanAheadRunner:
     # ------------------------------ run --------------------------------
     def run(self):
         """Returns (params, history, stats: RunnerStats)."""
+        if self.rcfg.fault_domain == "process":
+            # the process fault domain replaces this whole in-process loop:
+            # one OS process per DP replica, a socket coordinator doing the
+            # planning, and real SIGKILL chaos delivered by the driver
+            from repro.dist.cluster import run_process_cluster
+            return run_process_cluster(
+                self.cfg, self.cost, self.pcfg, self.rcfg, self.stream,
+                opt_cfg=self.opt_cfg, chaos=self.chaos)
         rcfg, pcfg, cfg = self.rcfg, self.pcfg, self.cfg
         key = jax.random.PRNGKey(rcfg.seed)
         params = (T.init_encdec(key, cfg) if self._encdec

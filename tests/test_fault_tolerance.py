@@ -198,7 +198,13 @@ def test_restore_or_init_leaf_count_mismatch_falls_back(tmp_path):
 
 
 def test_save_sweeps_stale_tmp_dirs(tmp_path):
-    stale = tmp_path / ".tmp-3-12345"
+    # the sweep is pid-aware: name a provably-dead writer (a reaped child),
+    # not an arbitrary number that may be someone's live pid
+    import subprocess
+    import sys
+    child = subprocess.Popen([sys.executable, "-c", "pass"])
+    child.wait(timeout=30)
+    stale = tmp_path / f".tmp-3-{child.pid}"
     stale.mkdir(parents=True)
     (stale / "junk.npy").write_bytes(b"torn")
     CKPT.save(tmp_path, 1, _tree())
